@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: timing, dataset scaling, CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from repro.core.graph import HeteroGraph, table3_graph
+
+# CPU-tractable scale factors for the Table 3 datasets (names preserved;
+# statistics proportional — see DESIGN.md §8.2)
+BENCH_SCALES: Dict[str, float] = {
+    "aifb": 0.5,
+    "mutag": 0.2,
+    "bgs": 0.03,
+    "fb15k": 0.03,
+    "biokg": 0.005,
+    "am": 0.004,
+    "mag": 0.001,
+    "wikikg2": 0.001,
+}
+
+DEFAULT_DATASETS = ["aifb", "mutag", "fb15k", "bgs"]
+
+
+def bench_graph(name: str, scale_mult: float = 1.0) -> HeteroGraph:
+    return table3_graph(name, scale=BENCH_SCALES[name] * scale_mult, seed=0)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds for a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

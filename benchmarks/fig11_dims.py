@@ -1,0 +1,36 @@
+"""Paper Fig. 11: (32,32) / (64,64) / (128,128) dimension sweep of
+unoptimized Hector — checks the sublinear time scaling the paper reports."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, csv_row, time_fn
+from repro.core.module import HectorModule
+from repro.models import rgat_program
+
+
+def run(datasets=("aifb", "mutag"), dims=(32, 64, 128), out=print):
+    rows = []
+    for ds in datasets:
+        hg = bench_graph(ds)
+        per_dim = {}
+        for d in dims:
+            x = jnp.asarray(
+                np.random.default_rng(0).normal(size=(hg.num_nodes, d)),
+                jnp.float32)
+            mod = HectorModule(rgat_program(d, d), hg, reorder=False,
+                               compact=False, backend="xla", tile=32, node_block=32)
+            params = mod.init(jax.random.key(0))
+            t = time_fn(lambda p, xx, m=mod: m.apply(p, {"feature": xx})["h_out"],
+                        params, x)
+            per_dim[d] = t
+            out(csv_row(f"fig11/{ds}/d{d}", t,
+                        f"rel_to_d32={t/per_dim[dims[0]]:.2f}x"))
+        rows.append((ds, per_dim))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+fig8   — Hector vs vanilla baselines (Fig. 8 / Table 4)
+table5 — compaction / reordering ablation (Table 5)
+fig9   — op-category breakdown (Fig. 3 / Fig. 9)
+fig10  — memory footprint & compaction ratio (Fig. 10)
+fig11  — hidden-dim sweep (Fig. 11)
+loc    — LoC report (§4.1)
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig8,table5,fig9,fig10,fig11,loc")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig8_speedup, fig9_breakdown, fig10_memory,
+                            fig11_dims, loc_report, table5_opts)
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("fig10", fig10_memory.run),   # cheap first
+        ("loc", loc_report.run),
+        ("fig11", fig11_dims.run),
+        ("table5", table5_opts.run),
+        ("fig9", fig9_breakdown.run),
+        ("fig8", fig8_speedup.run),
+    ]
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{e!r}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

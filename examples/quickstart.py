@@ -1,0 +1,39 @@
+"""Quickstart: express an RGNN in Hector IR, compile, inspect the generated
+plan, and run it — the paper's Figure-5 workflow in ~20 lines of user code.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import synthetic_heterograph
+from repro.core.module import HectorModule
+from repro.models import rgat_program
+
+# a small heterogeneous graph: 5 node types, 12 relation types
+graph = synthetic_heterograph(num_nodes=1000, num_edges=8000,
+                              num_ntypes=5, num_etypes=12, seed=0)
+print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
+      f"entity compaction ratio {graph.entity_compaction_ratio:.2f}")
+
+# the model is inter-operator IR (6 statements); compilation applies linear
+# operator reordering + compact materialization and lowers onto the GEMM /
+# traversal templates
+prog = rgat_program(in_dim=64, out_dim=64)
+mod = HectorModule(prog, graph, reorder=True, compact=True, backend="xla")
+print("\ngenerated plan:")
+print(mod.describe())
+
+params = mod.init(jax.random.key(0))
+x = jnp.asarray(np.random.default_rng(0).normal(size=(graph.num_nodes, 64)),
+                jnp.float32)
+out = mod.apply(params, {"feature": x})["h_out"]
+print(f"\noutput: {out.shape} finite={bool(jnp.all(jnp.isfinite(out)))}")
+
+# gradients come from template-derived backward ops (custom_vjp)
+loss, grads = jax.value_and_grad(
+    lambda p: jnp.mean(mod.apply(p, {"feature": x})["h_out"] ** 2))(params)
+print(f"loss={float(loss):.4f}, grad norms: "
+      + ", ".join(f"{k}={float(jnp.linalg.norm(v)):.3f}"
+                  for k, v in grads.items()))

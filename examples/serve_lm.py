@@ -1,0 +1,16 @@
+"""Batched LM serving on CPU with a reduced architecture: prefill + decode
+with the sharded KV-cache path (wraps repro.launch.serve).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch jamba-v0.1-52b
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    args, rest = ap.parse_known_args()
+    serve_main(["--arch", args.arch, "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16", *rest])

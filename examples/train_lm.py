@@ -1,0 +1,19 @@
+"""LM pre-training loop with fault-tolerance drill: trains a reduced config
+of any assigned architecture with async checkpointing, then simulates a host
+failure mid-run and recovers (wraps repro.launch.train).
+
+    PYTHONPATH=src python examples/train_lm.py --arch moonshot-v1-16b-a3b
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=30)
+    args, rest = ap.parse_known_args()
+    train_main(["--arch", args.arch, "--reduced",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "64",
+                "--ckpt-dir", "/tmp/train_lm_ckpt", "--ckpt-every", "10",
+                "--simulate-failure", str(args.steps // 2), *rest])

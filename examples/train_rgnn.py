@@ -1,0 +1,75 @@
+"""End-to-end RGNN training driver: 2-layer RGAT node classifier trained for
+a few hundred steps on a synthetic heterograph (the paper's workload kind),
+with AdamW, cosine LR and checkpointing.
+
+    PYTHONPATH=src python examples/train_rgnn.py [--steps 200]
+"""
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.core.graph import synthetic_heterograph
+from repro.core.module import HectorModule
+from repro.models import rgat_program
+from repro.optim import AdamW, cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/rgnn_ckpt")
+    args = ap.parse_args(argv)
+
+    graph = synthetic_heterograph(2000, 16000, num_ntypes=4, num_etypes=16,
+                                  seed=0, target_compaction=0.5)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(graph.num_nodes, args.dim)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, args.classes, graph.num_nodes))
+
+    layer1 = HectorModule(rgat_program(args.dim, args.dim), graph)
+    layer2 = HectorModule(rgat_program(args.dim, args.classes), graph)
+    params = {"l1": layer1.init(jax.random.key(1)),
+              "l2": layer2.init(jax.random.key(2))}
+
+    def forward(p, feats):
+        h = layer1.apply(p["l1"], {"feature": feats})["h_out"]
+        h = jax.nn.relu(h)
+        return layer2.apply(p["l2"], {"feature": h})["h_out"]
+
+    def loss_fn(p):
+        logits = forward(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+    opt = AdamW(learning_rate=cosine_schedule(3e-3, 20, args.steps),
+                weight_decay=0.01)
+    state = opt.init(params)
+    ckpt = Checkpointer(args.ckpt)
+
+    @jax.jit
+    def step(state):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params)
+        return opt.update(grads, state), loss
+
+    losses = []
+    for i in range(args.steps):
+        state, loss = step(state)
+        losses.append(float(loss))
+        if (i + 1) % 50 == 0:
+            ckpt.save(i + 1, state)
+            print(f"step {i+1:4d}  loss {losses[-1]:.4f}")
+    ckpt.wait()
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(acc proxy: {np.exp(-losses[-1]):.2%} vs chance "
+          f"{1/args.classes:.2%})")
+    assert losses[-1] < losses[0]
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,307 @@
+"""Hector code generator (paper §3.6), TPU/JAX adaptation.
+
+GPU Hector emits CUDA kernels + host functions from intra-operator IR specs.
+The JAX equivalent of "emitting code" is building **closed jitted callables**:
+each ``GemmSpec`` instantiates the segment-MM kernel (Pallas) or its XLA
+formulation with the access schemes baked in; each ``TraversalSpec`` executes
+its fused statement region, pattern-matching the canonical fused
+edge-softmax(+aggregate) region onto the fused traversal kernel. Fallbacks
+run as plain jnp ops (the "PyTorch fallback" of §3.2.5).
+
+Auto-differentiation: the paper pairs hand-written backward kernels via
+``autograd.Function`` (§3.5); here every kernel op carries a ``custom_vjp``
+whose backward is itself template-derived (outer-product GEMM instances for
+dW, traversal instances for feature grads) — see kernels/ops.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import GraphTensors, HeteroGraph
+from repro.core.ir import inter_op as I
+from repro.core.ir import intra_op as O
+from repro.kernels import layout as L
+from repro.kernels import ops as K
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelLayouts:
+    """Per-graph tile-aligned layouts for the generated kernels (host-built)."""
+
+    edge_seg: K.PaddedSegmentsDev      # etype segments over canonical edges
+    unique_seg: K.PaddedSegmentsDev    # etype segments over unique (src,etype)
+    node_seg: K.PaddedSegmentsDev      # ntype segments over nodes
+    blocked: K.BlockedCSRDev           # dst-sorted blocked CSR
+
+
+def build_kernel_layouts(
+    hg: HeteroGraph, tile: int = 128, node_block: int = 128
+) -> KernelLayouts:
+    return KernelLayouts(
+        edge_seg=K.padded_segments_dev(L.pad_segments(hg.etype_ptr, tile)),
+        unique_seg=K.padded_segments_dev(L.pad_segments(hg.unique_etype_ptr, tile)),
+        node_seg=K.padded_segments_dev(L.pad_segments(hg.ntype_ptr, tile)),
+        blocked=K.blocked_csr_dev(
+            L.block_csr(hg.dst_ptr, edge_tile=tile, node_block=node_block),
+            hg.perm_dst,
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization from the plan's weight table
+# ---------------------------------------------------------------------------
+def init_params(
+    plan: O.Plan, gt: GraphTensors, key: jax.Array, dtype=jnp.float32
+) -> Dict[str, jnp.ndarray]:
+    params: Dict[str, jnp.ndarray] = {}
+    names = sorted(n for n in plan.weights if not n.startswith("_wprod"))
+    keys = jax.random.split(key, max(1, len(names)))
+    for k, name in zip(keys, names):
+        w = plan.weights[name]
+        if w.indexed_by == "etype":
+            lead = (gt.num_etypes,)
+        elif w.indexed_by in ("ntype", "ntype_src", "ntype_dst"):
+            lead = (gt.num_ntypes,)
+        else:
+            lead = ()
+        shape = lead + tuple(w.shape)
+        fan_in = w.shape[0] if len(w.shape) >= 1 else 1
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+        params[name] = (jax.random.normal(k, shape) * scale).astype(dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# the generated forward function
+# ---------------------------------------------------------------------------
+_SOFTMAX_TAIL = ("segment_max", "gather_dst_var", "elementwise", "elementwise",
+                 "segment_sum", "gather_dst_var", "elementwise")
+
+
+class _Env:
+    """Execution environment: name -> array, with layout-aware edge reads."""
+
+    def __init__(self, plan: O.Plan, gt: GraphTensors, params, feats):
+        self.plan = plan
+        self.gt = gt
+        self.vals: Dict[str, jnp.ndarray] = {}
+        for name, v in feats.items():
+            self.vals["node:" + name] = v
+        self.params = dict(params)
+
+    def get(self, name: str) -> jnp.ndarray:
+        if name.startswith("scalar:"):
+            return jnp.float32(float(name.split(":", 1)[1]))
+        if name in self.vals:
+            return self.vals[name]
+        if name.startswith("node:") and name[5:] in self.vals:
+            return self.vals[name[5:]]
+        raise KeyError(f"undefined IR value {name!r}; have {list(self.vals)}")
+
+    def get_edge_vanilla(self, name: str) -> jnp.ndarray:
+        """Read an edge var in canonical per-edge order, resolving compact
+        layout through the edge_to_unique indirection."""
+        v = self.get(name)
+        if self.plan.layouts.get(name) == I.Layout.COMPACT:
+            return v[self.gt.edge_to_unique]
+        return v
+
+    def set(self, name: str, v: jnp.ndarray):
+        self.vals[name] = v
+
+
+def _elementwise(op: str, args, alpha: float = 0.01):
+    def rank2(x):
+        return x
+
+    a = args[0]
+    if len(args) == 1:
+        if op == "exp":
+            return jnp.exp(a)
+        if op == "leaky_relu":
+            return jnp.where(a > 0, a, alpha * a)
+        if op == "relu":
+            return jnp.maximum(a, 0)
+        if op == "sigmoid":
+            return jax.nn.sigmoid(a)
+        if op == "tanh":
+            return jnp.tanh(a)
+        if op == "neg":
+            return -a
+        raise ValueError(op)
+    b = args[1]
+    if a.ndim == 2 and b.ndim == 1:
+        b = b[:, None]
+    elif a.ndim == 1 and b.ndim == 2:
+        a = a[:, None]
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "div":
+        return a / b
+    raise ValueError(op)
+
+
+def execute_plan(
+    plan: O.Plan,
+    params: Dict[str, jnp.ndarray],
+    gt: GraphTensors,
+    feats: Dict[str, jnp.ndarray],
+    kl: KernelLayouts,
+    backend: str = "xla",
+) -> Dict[str, jnp.ndarray]:
+    """Run the lowered layer. Returns {output name: array}."""
+    env = _Env(plan, gt, params, feats)
+    derived: Dict[str, jnp.ndarray] = {}
+
+    def weight(name: str) -> jnp.ndarray:
+        return derived.get(name, env.params.get(name))
+
+    for op in plan.ops:
+        if isinstance(op, O.WeightProductSpec):
+            wm, wv = env.params[op.w_matrix], env.params[op.w_vector]
+            # (x W_r) · w_r == x (W_r w_r^T): hoisted weight-weight BMM
+            derived[op.out] = jnp.einsum("rdf,rf->rd", wm, wv)[..., None]
+        elif isinstance(op, O.GemmSpec):
+            _exec_gemm(op, env, weight, gt, kl, backend)
+        elif isinstance(op, O.TraversalSpec):
+            _exec_traversal(op, env, gt, kl, backend)
+        elif isinstance(op, O.FallbackSpec):
+            raise NotImplementedError(
+                f"fallback op {op.stmt} reached the executor; add a jnp "
+                f"lowering for it"
+            )
+    return {name: env.get(name) for name in plan.outputs}
+
+
+def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,
+               kl: KernelLayouts, backend: str):
+    w = weight(op.weight)
+    # resolve X via the gather scheme
+    if op.gather == O.GatherScheme.BY_EDGE_SRC:
+        x = env.get(op.x_source)[gt.src]
+        lay = kl.edge_seg
+    elif op.gather == O.GatherScheme.BY_EDGE_DST:
+        x = env.get(op.x_source)[gt.dst]
+        lay = kl.edge_seg
+    elif op.gather == O.GatherScheme.BY_UNIQUE_SRC:
+        x = env.get(op.x_source)[gt.unique_src]
+        lay = kl.unique_seg
+    elif op.gather == O.GatherScheme.BY_NODE:
+        x = env.get(op.x_source)
+        lay = kl.node_seg
+    else:  # IDENTITY: var already in segment-sorted order
+        x = env.get(op.x_source.split(":", 1)[1]
+                    if op.x_source.startswith("edge:") else op.x_source)
+        lay = {
+            "etype_ptr": kl.edge_seg,
+            "unique_etype_ptr": kl.unique_seg,
+            "ntype_ptr": kl.node_seg,
+        }.get(op.seg_ptr)
+
+    scale = None
+    if op.per_row_scale is not None:
+        scale = env.get_edge_vanilla(op.per_row_scale)
+        if scale.ndim == 2:
+            scale = scale[:, 0]
+
+    if op.type_index == O.TypeIndex.NONE:
+        y = x @ w
+        if scale is not None:
+            y = y * scale[:, None]
+    else:
+        y = K.segment_mm(x, w, lay, row_scale=scale, backend=backend)
+    out = y[:, 0] if (op.out_cols == 1 and y.shape[-1] == 1) else y
+    env.set(op.out, out)
+
+
+def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
+                    kl: KernelLayouts, backend: str):
+    """Execute a fused traversal region, fusing the canonical softmax(+agg)
+    pattern onto the Pallas traversal kernel when present."""
+    stmts = op.stmts
+    i = 0
+    while i < len(stmts):
+        # peephole: expanded softmax (7 stmts) [+ segment_sum scaled by it]
+        if (
+            i + len(_SOFTMAX_TAIL) <= len(stmts)
+            and tuple(s.kind for s in stmts[i : i + 7]) == _SOFTMAX_TAIL
+        ):
+            score_name = stmts[i].ins[0]
+            att_name = stmts[i + 6].out
+            scores = env.get_edge_vanilla(score_name)
+            if scores.ndim == 2:
+                scores = scores[:, 0]
+            nxt = stmts[i + 7] if i + 7 < len(stmts) else None
+            if (
+                nxt is not None
+                and nxt.kind == "segment_sum"
+                and nxt.scale == att_name
+                and backend != "xla"
+            ):
+                # fully fused softmax+aggregate traversal kernel
+                msg = env.get_edge_vanilla(nxt.ins[0])
+                out = K.edge_softmax_agg(
+                    scores, msg, gt.dst, gt.num_nodes,
+                    bc=kl.blocked, backend=backend,
+                )
+                env.set(nxt.out, out)
+                env.set(att_name, K.edge_softmax(scores, gt.dst, gt.num_nodes))
+                i += 8
+                continue
+            env.set(att_name, K.edge_softmax(scores, gt.dst, gt.num_nodes))
+            i += 7
+            continue
+
+        s = stmts[i]
+        if s.kind == "elementwise":
+            args = [env.get_edge_vanilla(a) if not a.startswith(("node:", "scalar:"))
+                    else env.get(a) for a in s.ins]
+            env.set(s.out, _elementwise(s.op, args, s.alpha))
+        elif s.kind == "rowdot":
+            a = env.get_edge_vanilla(s.ins[0])
+            b = env.get_edge_vanilla(s.ins[1])
+            env.set(s.out, jnp.sum(a * b, axis=-1))
+        elif s.kind == "concat":
+            env.set(s.out, jnp.concatenate(
+                [env.get_edge_vanilla(a) for a in s.ins], axis=-1))
+        elif s.kind == "gather_src":
+            env.set(s.out, env.get(s.ins[0])[gt.src])
+        elif s.kind == "gather_dst":
+            env.set(s.out, env.get(s.ins[0])[gt.dst])
+        elif s.kind == "gather_dst_var":
+            env.set(s.out, env.get(s.ins[0])[gt.dst])
+        elif s.kind == "gather_unique":
+            env.set(s.out, env.get(s.ins[0])[gt.edge_to_unique])
+        elif s.kind == "gather_etype_weight":
+            env.set(s.out, env.params[s.ins[0]][gt.etype])
+        elif s.kind == "segment_max":
+            x = env.get_edge_vanilla(s.ins[0])
+            mx = jax.ops.segment_max(x, gt.dst, num_segments=gt.num_nodes)
+            env.set(s.out, jnp.where(jnp.isfinite(mx), mx, 0.0))
+        elif s.kind == "segment_sum":
+            msg = env.get_edge_vanilla(s.ins[0])
+            scale = None
+            if s.scale is not None:
+                scale = env.get_edge_vanilla(s.scale)
+                if scale.ndim == 2:
+                    scale = scale[:, 0]
+            out = K.weighted_agg(scale, msg, gt.dst, gt.num_nodes,
+                                 bc=kl.blocked, backend=backend)
+            if s.op == "mean":
+                deg = (gt.dst_ptr[1:] - gt.dst_ptr[:-1]).astype(out.dtype)
+                out = out / jnp.maximum(deg, 1.0)[:, None]
+            env.set(s.out, out)
+        else:
+            raise NotImplementedError(f"traversal stmt {s.kind}")
+        i += 1

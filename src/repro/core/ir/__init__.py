@@ -1,0 +1,1 @@
+from repro.core.ir import inter_op, intra_op, passes  # noqa: F401

@@ -1,0 +1,272 @@
+"""Hector inter-operator level IR (paper §3.2).
+
+The IR expresses RGNN model semantics as for-each-edge / for-each-node loops
+over typed graph elements, **without** dictating data layout. Constructs map
+1:1 onto Table 2 of the paper:
+
+  node/edge iterators        -> ``ForEachEdge`` / ``ForEachNode`` statements
+  ``e.src``, ``e.dst``       -> ``SrcFeature`` / ``DstFeature`` accessors
+  ``W[e.etype]``             -> ``Weight(name, indexed_by="etype")``
+  input data ``n.feature``   -> ``NodeFeature``
+  produced data ``e["att"]`` -> ``EdgeVar`` / ``NodeVar`` (layout decided later)
+  GEMM-eligible ops          -> ``TypedLinear``, ``Linear``
+  GEMM-ineligible ops        -> ``DotProduct``, elementwise ``Unary``/``Binary``
+  manipulation               -> ``Concat``, reshape is implicit
+
+A model is a ``Program``: an ordered list of statements. Layout choices
+(vanilla vs compact materialization per edge variable) are annotations kept
+*next to* the program (``Program.layouts``), never inside expressions —
+that decoupling is the paper's central design point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class Layout(enum.Enum):
+    """Materialization choice for an edge-associated variable (§3.2.2)."""
+
+    VANILLA = "vanilla"     # one row per edge (etype-sorted canonical order)
+    COMPACT = "compact"     # one row per unique (src node, etype) pair
+
+
+# ---------------------------------------------------------------------------
+# expressions
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Expr:
+    def free_inputs(self) -> Tuple["Expr", ...]:
+        return ()
+
+    def children(self) -> Tuple["Expr", ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFeature(Expr):
+    """Input node feature tensor [N, d]."""
+    name: str = "feature"
+
+
+@dataclasses.dataclass(frozen=True)
+class SrcFeature(Expr):
+    """``e.src.<name>`` — gather of node data by edge source."""
+    name: str = "feature"
+
+
+@dataclasses.dataclass(frozen=True)
+class DstFeature(Expr):
+    """``e.dst.<name>`` — gather of node data by edge destination."""
+    name: str = "feature"
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeVar(Expr):
+    """``e["name"]`` — produced edgewise data."""
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeVar(Expr):
+    """``n["name"]`` — produced nodewise data."""
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Weight(Expr):
+    """Model weight, optionally indexed by a type dimension.
+
+    ``indexed_by`` in {None, "etype", "ntype_src", "ntype_dst"}; shape is the
+    *per-type* shape (e.g. (d_in, d_out) for a typed linear).
+    """
+    name: str
+    shape: Tuple[int, ...]
+    indexed_by: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TypedLinear(Expr):
+    """``x @ W[type]`` — the edgewise/nodewise typed linear layer (§2.3)."""
+    x: Expr
+    weight: Weight
+
+    def children(self):
+        return (self.x, self.weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear(Expr):
+    """Untyped linear ``x @ W`` (single relation degenerate case, §3.7)."""
+    x: Expr
+    weight: Weight
+
+    def children(self):
+        return (self.x, self.weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class DotProduct(Expr):
+    """Edgewise dot product -> scalar per edge (GEMM-ineligible, §3.3.1)."""
+    a: Expr
+    b: Expr
+
+    def children(self):
+        return (self.a, self.b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Binary(Expr):
+    op: str  # add | sub | mul | div
+    a: Expr
+    b: Expr
+
+    def children(self):
+        return (self.a, self.b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Unary(Expr):
+    op: str  # exp | leaky_relu | relu | sigmoid | neg | tanh
+    a: Expr
+    alpha: float = 0.01  # leaky_relu slope
+
+    def children(self):
+        return (self.a,)
+
+
+@dataclasses.dataclass(frozen=True)
+class Concat(Expr):
+    parts: Tuple[Expr, ...]
+
+    def children(self):
+        return tuple(self.parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scalar(Expr):
+    value: float
+
+
+# ---------------------------------------------------------------------------
+# statements
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Stmt:
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeCompute(Stmt):
+    """``for e in g.edges(): e[out] = expr``"""
+    out: str
+    expr: Expr
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSoftmax(Stmt):
+    """``e[out] = softmax_{edges sharing e.dst}(e[src])`` (Listing 1 lines 1-9).
+
+    Kept as a composite statement; canonicalization may expand it into the
+    exp / per-dst-sum / divide loop nest, and the traversal template re-fuses
+    it (§3.2.4 loop transformation round-trips this).
+    """
+    out: str
+    src: str
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeAggregate(Stmt):
+    """``for n: n[out] = reduce_{e in n.incoming_edges()} scale * e[msg]``.
+
+    ``scale`` (optional edge scalar variable, e.g. attention) multiplies each
+    message row; reduce is 'sum' or 'mean' (mean divides by in-degree, the
+    RGCN 1/c_{v,r} normalizer folded per destination).
+    """
+    out: str
+    msg: str
+    scale: Optional[str] = None
+    reduce: str = "sum"
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeCompute(Stmt):
+    """``for n in g.nodes(): n[out] = expr`` (expr over node data)."""
+    out: str
+    expr: Expr
+
+
+# ---------------------------------------------------------------------------
+# program
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Program:
+    """An RGNN layer as inter-operator IR + decoupled layout annotations."""
+
+    stmts: List[Stmt]
+    outputs: List[str]                       # node/edge vars returned
+    layouts: Dict[str, Layout] = dataclasses.field(default_factory=dict)
+    name: str = "rgnn_layer"
+
+    def layout_of(self, var: str) -> Layout:
+        return self.layouts.get(var, Layout.VANILLA)
+
+    def clone(self) -> "Program":
+        return Program(list(self.stmts), list(self.outputs),
+                       dict(self.layouts), self.name)
+
+    def weights(self) -> Dict[str, Weight]:
+        out: Dict[str, Weight] = {}
+
+        def visit(e: Expr):
+            if isinstance(e, Weight):
+                out[e.name] = e
+            for c in e.children():
+                visit(c)
+
+        for s in self.stmts:
+            if isinstance(s, (EdgeCompute, NodeCompute)):
+                visit(s.expr)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# expression analysis helpers used by the passes
+# ---------------------------------------------------------------------------
+def expr_deps(e: Expr) -> set:
+    """Set of dependency tags: 'src', 'dst', 'etype', 'ntype', edge/node vars."""
+    deps: set = set()
+
+    def visit(x: Expr):
+        if isinstance(x, SrcFeature):
+            deps.add("src")
+        elif isinstance(x, DstFeature):
+            deps.add("dst")
+        elif isinstance(x, EdgeVar):
+            deps.add(("evar", x.name))
+        elif isinstance(x, NodeVar):
+            deps.add(("nvar", x.name))
+        elif isinstance(x, Weight) and x.indexed_by == "etype":
+            deps.add("etype")
+        elif isinstance(x, Weight) and x.indexed_by in ("ntype_src", "ntype_dst"):
+            deps.add("ntype")
+            deps.add("src" if x.indexed_by == "ntype_src" else "dst")
+        for c in x.children():
+            visit(c)
+
+    visit(e)
+    return deps
+
+
+def compactable(e: Expr, compact_vars: set) -> bool:
+    """True if an edgewise expression depends only on (src, etype) — the
+    compact-materialization applicability condition (§3.2.2). Reading another
+    edge var is fine iff that var is itself compact."""
+    deps = expr_deps(e)
+    if "dst" in deps:
+        return False
+    for d in deps:
+        if isinstance(d, tuple) and d[0] == "evar" and d[1] not in compact_vars:
+            return False
+    return True

@@ -1,0 +1,335 @@
+"""jit'd wrapper ops around the Pallas templates + XLA fallbacks.
+
+These are the operators the Hector code generator instantiates. Every op has
+three interchangeable execution paths selected by ``backend``:
+
+  'xla'               tile-aligned einsum formulation (natively differentiable,
+                      GSPMD-shardable; used on CPU and in the multi-pod dry-run)
+  'pallas'            the TPU kernel (custom_vjp; backward = template-derived
+                      outer-product GEMM + traversal instances, paper §3.5)
+  'pallas_interpret'  same kernel body executed in interpret mode (CPU tests)
+
+Numerical contract: all paths match ``kernels/ref.py`` oracles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import layout as L
+from repro.kernels import ref as R
+from repro.kernels import segment_mm as SK
+from repro.kernels import traversal as TK
+
+Backend = str  # 'xla' | 'pallas' | 'pallas_interpret'
+
+
+# ---------------------------------------------------------------------------
+# device-side layout bundles
+# ---------------------------------------------------------------------------
+class PaddedSegmentsDev(NamedTuple):
+    row_map: jnp.ndarray      # [Rp]
+    inv_map: jnp.ndarray      # [M]
+    t2g: jnp.ndarray          # [T]
+    tile: int
+    num_groups: int
+
+
+class BlockedCSRDev(NamedTuple):
+    edge_map: jnp.ndarray     # [Ep] canonical edge index or -1
+    local_dst: jnp.ndarray    # [T, tile]
+    t2b: jnp.ndarray          # [T]
+    edge_tile: int
+    node_block: int
+    num_node_blocks: int
+    num_nodes: int
+
+
+def padded_segments_dev(ps: L.PaddedSegments) -> PaddedSegmentsDev:
+    return PaddedSegmentsDev(
+        row_map=jnp.asarray(ps.row_map),
+        inv_map=jnp.asarray(ps.inv_map),
+        t2g=jnp.asarray(ps.tile_to_group),
+        tile=ps.tile,
+        num_groups=ps.num_groups,
+    )
+
+
+def blocked_csr_dev(bc: L.BlockedCSR, perm_dst: np.ndarray) -> BlockedCSRDev:
+    """Compose dst-sorted edge_map with perm_dst -> canonical edge indices."""
+    edge_map = np.where(
+        bc.edge_map >= 0, np.asarray(perm_dst)[np.maximum(bc.edge_map, 0)], -1
+    ).astype(np.int32)
+    t = bc.num_tiles
+    return BlockedCSRDev(
+        edge_map=jnp.asarray(edge_map),
+        local_dst=jnp.asarray(bc.local_dst.reshape(t, bc.edge_tile)),
+        t2b=jnp.asarray(bc.tile_to_block),
+        edge_tile=bc.edge_tile,
+        node_block=bc.node_block,
+        num_node_blocks=bc.num_node_blocks,
+        num_nodes=bc.num_nodes,
+    )
+
+
+def pad_rows(x: jnp.ndarray, row_map: jnp.ndarray,
+             fill: float = 0.0) -> jnp.ndarray:
+    """Gather rows into the padded layout; pad rows get ``fill``."""
+    valid = (row_map >= 0)
+    xp = x[jnp.maximum(row_map, 0)]
+    if x.ndim == 1:
+        return jnp.where(valid, xp, fill)
+    return jnp.where(valid[:, None], xp, fill)
+
+
+# ---------------------------------------------------------------------------
+# segment MM (the GEMM template)
+# ---------------------------------------------------------------------------
+def _segment_mm_xla_padded(x_p, w, t2g, scale_p, tile):
+    t = t2g.shape[0]
+    xt = x_p.reshape(t, tile, x_p.shape[-1])
+    wt = w[t2g]                                    # [T, k, n]
+    y = jnp.einsum("tck,tkn->tcn", xt, wt,
+                   preferred_element_type=jnp.float32)
+    y = y.reshape(t * tile, -1).astype(x_p.dtype)
+    if scale_p is not None:
+        y = y * scale_p
+    return y
+
+
+@functools.lru_cache(maxsize=None)
+def _make_pallas_segment_mm(tile_rows: int, tile_n: int, num_groups: int,
+                            with_scale: bool, interpret: bool):
+    kw = dict(tile_rows=tile_rows, tile_n=tile_n, interpret=interpret)
+
+    @jax.custom_vjp
+    def f(x_p, w, scale_p, t2g):
+        y = SK.segment_mm_padded(x_p, w, t2g, scale_p if with_scale else None,
+                                 **kw)
+        return y
+
+    def fwd(x_p, w, scale_p, t2g):
+        y_pre = SK.segment_mm_padded(x_p, w, t2g, None, **kw)
+        y = y_pre * scale_p if with_scale else y_pre
+        return y, (x_p, w, scale_p, t2g, y_pre)
+
+    def bwd(res, dy):
+        x_p, w, scale_p, t2g, y_pre = res
+        dys = dy * scale_p if with_scale else dy
+        w_t = jnp.swapaxes(w, 1, 2)
+        dx = SK.segment_mm_padded(
+            dys, w_t, t2g, None,
+            tile_rows=tile_rows, tile_n=min(tile_n, w.shape[1]),
+            interpret=interpret,
+        )
+        dw = SK.segment_outer_padded(
+            x_p, dys, t2g, num_groups=num_groups, tile_rows=tile_rows,
+            interpret=interpret,
+        )
+        # groups with zero rows own no tiles -> their dW block is never
+        # visited (uninitialized); mask them to exact zeros.
+        present = jax.ops.segment_sum(
+            jnp.ones_like(t2g), t2g, num_segments=num_groups
+        ) > 0
+        dw = jnp.where(present[:, None, None], dw, 0.0).astype(w.dtype)
+        if with_scale:
+            dscale = jnp.sum(dy * y_pre, axis=1, keepdims=True).astype(scale_p.dtype)
+        else:
+            dscale = jnp.zeros_like(scale_p)
+        dt2g = np.zeros(t2g.shape, dtype=jax.dtypes.float0)
+        return dx, dw, dscale, dt2g
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def segment_mm(
+    x_sorted: jnp.ndarray,                  # [M, k] type-sorted rows
+    w: jnp.ndarray,                         # [R, k, n]
+    lay: PaddedSegmentsDev,
+    row_scale: Optional[jnp.ndarray] = None,  # [M]
+    backend: Backend = "xla",
+    tile_n: int = 128,
+) -> jnp.ndarray:
+    """Y = X @ W[type] (+ per-row scale), X presorted by type. -> [M, n]."""
+    x_p = pad_rows(x_sorted, lay.row_map)
+    scale_p = None
+    if row_scale is not None:
+        scale_p = pad_rows(row_scale, lay.row_map)[:, None]
+    if backend == "xla":
+        y_p = _segment_mm_xla_padded(x_p, w, lay.t2g, scale_p, lay.tile)
+    else:
+        interpret = backend == "pallas_interpret"
+        n = w.shape[-1]
+        tn = n if n % min(tile_n, n) else min(tile_n, n)
+        if n % tn:
+            tn = n
+        f = _make_pallas_segment_mm(lay.tile, tn, lay.num_groups,
+                                    scale_p is not None, interpret)
+        if scale_p is None:
+            scale_p = jnp.ones((x_p.shape[0], 1), x_p.dtype)
+        y_p = f(x_p, w, scale_p, lay.t2g)
+    return y_p[lay.inv_map]
+
+
+def gather_mm(
+    feats: jnp.ndarray,                     # [N, k] node features
+    w: jnp.ndarray,                         # [R, k, n]
+    gather_idx: jnp.ndarray,                # [M] e.g. src / unique_src
+    lay: PaddedSegmentsDev,
+    row_scale: Optional[jnp.ndarray] = None,
+    backend: Backend = "xla",
+) -> jnp.ndarray:
+    """Full GEMM template: Y = X[G] @ W[T] (+ scale). Gather runs as an XLA
+    fused gather feeding the kernel (TPU adaptation, DESIGN.md §3)."""
+    return segment_mm(feats[gather_idx], w, lay, row_scale, backend)
+
+
+# ---------------------------------------------------------------------------
+# traversal ops
+# ---------------------------------------------------------------------------
+def _pad_edges(x: jnp.ndarray, bc: BlockedCSRDev, fill: float) -> jnp.ndarray:
+    """Canonical edge tensor -> padded dst-sorted layout."""
+    valid = bc.edge_map >= 0
+    xp = x[jnp.maximum(bc.edge_map, 0)]
+    if x.ndim == 1:
+        xp = jnp.where(valid, xp, fill)
+        return xp.reshape(-1, bc.edge_tile)
+    return jnp.where(valid[:, None], xp, fill)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_pallas_softmax_agg(node_block: int, num_node_blocks: int,
+                             num_nodes: int, interpret: bool):
+    kw = dict(node_block=node_block, num_node_blocks=num_node_blocks,
+              interpret=interpret)
+
+    @jax.custom_vjp
+    def f(scores, msg, dst, bc_edge_map, bc_local_dst, bc_t2b):
+        scores_p = jnp.where(
+            bc_edge_map >= 0, scores[jnp.maximum(bc_edge_map, 0)], TK._NEG_INF
+        ).reshape(-1, bc_local_dst.shape[-1])
+        msg_p = jnp.where(
+            (bc_edge_map >= 0)[:, None],
+            msg[jnp.maximum(bc_edge_map, 0)], 0.0,
+        )
+        mx, den = TK.seg_stats_padded(scores_p, bc_local_dst, bc_t2b, **kw)
+        out = TK.seg_softmax_agg_padded(
+            scores_p, msg_p, bc_local_dst, bc_t2b, mx, den, **kw
+        )
+        return out[:num_nodes]
+
+    res_shapes = {}
+
+    def fwd(scores, msg, dst, bc_edge_map, bc_local_dst, bc_t2b):
+        res_shapes["edge_map"] = bc_edge_map.shape
+        res_shapes["local_dst"] = bc_local_dst.shape
+        res_shapes["t2b"] = bc_t2b.shape
+        out = f(scores, msg, dst, bc_edge_map, bc_local_dst, bc_t2b)
+        att = R.edge_softmax_ref(scores, dst, num_nodes)
+        return out, (att, msg, dst)
+
+    def bwd_full(res, dout):
+        att, msg, dst = res
+        g = dout[dst]
+        dmsg = (att[:, None] * g).astype(msg.dtype)
+        datt = jnp.sum(msg * g, axis=-1)
+        c = jax.ops.segment_sum(att * datt, dst, num_segments=num_nodes)
+        dscores = (att * (datt - c[dst])).astype(att.dtype)
+        f0 = jax.dtypes.float0
+        return (
+            dscores, dmsg,
+            np.zeros(dst.shape, dtype=f0),
+            np.zeros(res_shapes["edge_map"], dtype=f0),
+            np.zeros(res_shapes["local_dst"], dtype=f0),
+            np.zeros(res_shapes["t2b"], dtype=f0),
+        )
+
+    f.defvjp(fwd, bwd_full)
+    return f
+
+
+def edge_softmax_agg(
+    scores: jnp.ndarray,        # [E] canonical order
+    msg: jnp.ndarray,           # [E, d] canonical order
+    dst: jnp.ndarray,           # [E] canonical destination ids
+    num_nodes: int,
+    bc: Optional[BlockedCSRDev] = None,
+    backend: Backend = "xla",
+) -> jnp.ndarray:
+    """out[v] = Σ_{e→v} softmax(scores)_e · msg_e — the fused traversal region."""
+    if backend == "xla" or bc is None:
+        return R.softmax_agg_ref(scores, msg, dst, num_nodes)
+    interpret = backend == "pallas_interpret"
+    f = _make_pallas_softmax_agg(bc.node_block, bc.num_node_blocks,
+                                 num_nodes, interpret)
+    return f(scores, msg, dst, bc.edge_map, bc.local_dst, bc.t2b)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_pallas_weighted_agg(node_block: int, num_node_blocks: int,
+                              num_nodes: int, interpret: bool):
+    kw = dict(node_block=node_block, num_node_blocks=num_node_blocks,
+              interpret=interpret)
+
+    @jax.custom_vjp
+    def f(scale, msg, dst, bc_edge_map, bc_local_dst, bc_t2b):
+        scale_p = jnp.where(
+            bc_edge_map >= 0, scale[jnp.maximum(bc_edge_map, 0)], 0.0
+        ).reshape(-1, bc_local_dst.shape[-1])
+        msg_p = jnp.where(
+            (bc_edge_map >= 0)[:, None],
+            msg[jnp.maximum(bc_edge_map, 0)], 0.0,
+        )
+        out = TK.seg_weighted_agg_padded(scale_p, msg_p, bc_local_dst,
+                                         bc_t2b, **kw)
+        return out[:num_nodes]
+
+    shapes = {}
+
+    def fwd(scale, msg, dst, bc_edge_map, bc_local_dst, bc_t2b):
+        shapes["m"] = (bc_edge_map.shape, bc_local_dst.shape, bc_t2b.shape)
+        out = f(scale, msg, dst, bc_edge_map, bc_local_dst, bc_t2b)
+        return out, (scale, msg, dst)
+
+    def bwd(res, dout):
+        scale, msg, dst = res
+        g = dout[dst]
+        dmsg = (scale[:, None] * g).astype(msg.dtype)
+        dscale = jnp.sum(msg * g, axis=-1).astype(scale.dtype)
+        f0 = jax.dtypes.float0
+        em, ld, tb = shapes["m"]
+        return (dscale, dmsg, np.zeros(dst.shape, f0),
+                np.zeros(em, f0), np.zeros(ld, f0), np.zeros(tb, f0))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def weighted_agg(
+    scale: Optional[jnp.ndarray],   # [E] or None
+    msg: jnp.ndarray,               # [E, d]
+    dst: jnp.ndarray,
+    num_nodes: int,
+    bc: Optional[BlockedCSRDev] = None,
+    backend: Backend = "xla",
+) -> jnp.ndarray:
+    """out[v] = Σ_{e→v} scale_e · msg_e."""
+    if backend == "xla" or bc is None:
+        return R.weighted_agg_ref(scale, msg, dst, num_nodes)
+    if scale is None:
+        scale = jnp.ones(msg.shape[0], msg.dtype)
+    interpret = backend == "pallas_interpret"
+    f = _make_pallas_weighted_agg(bc.node_block, bc.num_node_blocks,
+                                  num_nodes, interpret)
+    return f(scale, msg, dst, bc.edge_map, bc.local_dst, bc.t2b)
+
+
+def edge_softmax(scores: jnp.ndarray, dst: jnp.ndarray,
+                 num_nodes: int) -> jnp.ndarray:
+    """Per-edge stabilized softmax over incoming-edge groups (XLA)."""
+    return R.edge_softmax_ref(scores, dst, num_nodes)

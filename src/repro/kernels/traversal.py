@@ -1,0 +1,229 @@
+"""Traversal-template Pallas kernels (paper Algorithm 2, TPU adaptation).
+
+GPU Hector aggregates into destination rows with atomics (and identifies the
+resulting latency bound in §4.4). TPU Pallas grids are sequential per core,
+so we instead use the ``BlockedCSR`` layout (kernels/layout.py): edges sorted
+by destination, padded so each edge tile belongs to one destination-node
+block, and consecutive edge tiles of a block **accumulate into the same VMEM
+output block** (deterministic, contention-free).
+
+Kernels (all derived traversal-template instances):
+
+``seg_stats_padded``        per-destination (max, sum-exp) in ONE pass using
+                            online-softmax rescaling — the paper's
+                            "partial result aggregation" adapted to TPU.
+``seg_softmax_agg_padded``  out[v] = Σ_e softmax(score)_e · msg_e
+                            (fused edge-softmax + weighted aggregation: the
+                            canonical fused traversal region of Listing 1).
+``seg_weighted_agg_padded`` out[v] = Σ_e scale_e · msg_e (RGCN-style).
+
+The scatter "one-hot × message" contraction maps the per-edge scatter onto
+the MXU (a [node_block × tile] one-hot matmul) instead of per-element stores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _stats_kernel(meta_ref, scores_ref, dst_ref, mx_ref, den_ref, *, node_block):
+    t = pl.program_id(0)
+    is_first = meta_ref[1, t]
+
+    @pl.when(is_first == 1)
+    def _init():
+        mx_ref[...] = jnp.full_like(mx_ref, _NEG_INF)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    s = scores_ref[0, :].astype(jnp.float32)          # [tile]
+    dst = dst_ref[0, :]                               # [tile], pads == node_block
+    tile = s.shape[0]
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (node_block, tile), 0)
+    mask = node_ids == dst[None, :]                   # [NB, tile]
+    masked = jnp.where(mask, s[None, :], _NEG_INF)
+    m_tile = jnp.max(masked, axis=1)                  # [NB]
+
+    m_old = mx_ref[0, :]
+    m_new = jnp.maximum(m_old, m_tile)
+    # online rescale; guard -inf - -inf
+    old_factor = jnp.where(m_old <= _NEG_INF, 0.0, jnp.exp(m_old - m_new))
+    t_den = jnp.sum(
+        jnp.where(mask, jnp.exp(masked - m_new[:, None]), 0.0), axis=1
+    )
+    mx_ref[0, :] = m_new
+    den_ref[0, :] = den_ref[0, :] * old_factor + t_den
+
+
+@functools.partial(
+    jax.jit, static_argnames=("node_block", "num_node_blocks", "interpret")
+)
+def seg_stats_padded(
+    scores_p: jnp.ndarray,     # [T, tile] dst-sorted padded scores (pads: any)
+    local_dst_p: jnp.ndarray,  # [T, tile] int32 local dst (pads: node_block)
+    t2b: jnp.ndarray,          # [T] int32 non-decreasing tile -> node block
+    *,
+    node_block: int,
+    num_node_blocks: int,
+    interpret: bool = False,
+):
+    num_tiles, tile = scores_p.shape
+    prev = jnp.concatenate([jnp.array([-1], jnp.int32), t2b[:-1]])
+    meta = jnp.stack([t2b.astype(jnp.int32), (t2b != prev).astype(jnp.int32)])
+
+    mx, den = pl.pallas_call(
+        functools.partial(_stats_kernel, node_block=node_block),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(num_tiles,),
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda t, meta: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t, meta: (t, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, node_block), lambda t, meta: (meta[0, t], 0)),
+                pl.BlockSpec((1, node_block), lambda t, meta: (meta[0, t], 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((num_node_blocks, node_block), jnp.float32),
+            jax.ShapeDtypeStruct((num_node_blocks, node_block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(meta, scores_p, local_dst_p)
+    return mx, den
+
+
+def _softmax_agg_kernel(meta_ref, scores_ref, dst_ref, msg_ref, mx_ref, den_ref,
+                        out_ref, *, node_block):
+    t = pl.program_id(0)
+    is_first = meta_ref[1, t]
+
+    @pl.when(is_first == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = scores_ref[0, :].astype(jnp.float32)          # [tile]
+    dst = dst_ref[0, :]                               # [tile]
+    tile = s.shape[0]
+    valid = dst < node_block
+    dst_c = jnp.where(valid, dst, 0)
+    mx = mx_ref[0, :]
+    den = den_ref[0, :]
+    att = jnp.exp(s - mx[dst_c]) / jnp.maximum(den[dst_c], 1e-38)
+    att = jnp.where(valid, att, 0.0)                  # [tile]
+
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (node_block, tile), 0)
+    onehot = (node_ids == dst[None, :]).astype(jnp.float32)
+    contrib = jax.lax.dot(
+        onehot, att[:, None] * msg_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )                                                 # [NB, d]
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("node_block", "num_node_blocks", "interpret")
+)
+def seg_softmax_agg_padded(
+    scores_p: jnp.ndarray,     # [T, tile]
+    msg_p: jnp.ndarray,        # [T*tile, d]  dst-sorted padded messages
+    local_dst_p: jnp.ndarray,  # [T, tile]
+    t2b: jnp.ndarray,          # [T]
+    mx: jnp.ndarray,           # [NBk, NB]  from seg_stats_padded
+    den: jnp.ndarray,          # [NBk, NB]
+    *,
+    node_block: int,
+    num_node_blocks: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    num_tiles, tile = scores_p.shape
+    d = msg_p.shape[-1]
+    prev = jnp.concatenate([jnp.array([-1], jnp.int32), t2b[:-1]])
+    meta = jnp.stack([t2b.astype(jnp.int32), (t2b != prev).astype(jnp.int32)])
+
+    return pl.pallas_call(
+        functools.partial(_softmax_agg_kernel, node_block=node_block),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(num_tiles,),
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda t, meta: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t, meta: (t, 0)),
+                pl.BlockSpec((tile, d), lambda t, meta: (t, 0)),
+                pl.BlockSpec((1, node_block), lambda t, meta: (meta[0, t], 0)),
+                pl.BlockSpec((1, node_block), lambda t, meta: (meta[0, t], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (node_block, d), lambda t, meta: (meta[0, t], 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_node_blocks * node_block, d),
+                                       msg_p.dtype),
+        interpret=interpret,
+    )(meta, scores_p, local_dst_p, msg_p, mx, den)
+
+
+def _weighted_agg_kernel(meta_ref, scale_ref, dst_ref, msg_ref, out_ref, *,
+                         node_block):
+    t = pl.program_id(0)
+    is_first = meta_ref[1, t]
+
+    @pl.when(is_first == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = dst_ref[0, :]
+    tile = dst.shape[0]
+    valid = dst < node_block
+    scale = jnp.where(valid, scale_ref[0, :].astype(jnp.float32), 0.0)
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (node_block, tile), 0)
+    onehot = (node_ids == dst[None, :]).astype(jnp.float32)
+    contrib = jax.lax.dot(
+        onehot, scale[:, None] * msg_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("node_block", "num_node_blocks", "interpret")
+)
+def seg_weighted_agg_padded(
+    scale_p: jnp.ndarray,      # [T, tile] per-edge scalar (pads: 0); ones for plain sum
+    msg_p: jnp.ndarray,        # [T*tile, d]
+    local_dst_p: jnp.ndarray,  # [T, tile]
+    t2b: jnp.ndarray,          # [T]
+    *,
+    node_block: int,
+    num_node_blocks: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    num_tiles, tile = scale_p.shape
+    d = msg_p.shape[-1]
+    prev = jnp.concatenate([jnp.array([-1], jnp.int32), t2b[:-1]])
+    meta = jnp.stack([t2b.astype(jnp.int32), (t2b != prev).astype(jnp.int32)])
+
+    return pl.pallas_call(
+        functools.partial(_weighted_agg_kernel, node_block=node_block),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(num_tiles,),
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda t, meta: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t, meta: (t, 0)),
+                pl.BlockSpec((tile, d), lambda t, meta: (t, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (node_block, d), lambda t, meta: (meta[0, t], 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_node_blocks * node_block, d),
+                                       msg_p.dtype),
+        interpret=interpret,
+    )(meta, scale_p, local_dst_p, msg_p)

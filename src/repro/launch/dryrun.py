@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun                # all 40 cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod    # 2x16x16 pass
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+report (launch/roofline.py) reads them.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs as C
+from repro.lm.config import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+from repro.launch.roofline import (
+    collective_bytes_from_hlo, summarize_cost, roofline_terms, HW_V5E,
+    model_flops, analytic_memory_bytes,
+)
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             part_kwargs=None, tag: str = "", verbose: bool = True) -> dict:
+    cfg = C.get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": n_chips,
+        "mode": cell.mode, "tag": tag or "baseline",
+        "params_b": cfg.param_count() / 1e9,
+        "active_params_b": cfg.active_param_count() / 1e9,
+    }
+    t0 = time.time()
+    bundle = build_step(cfg, cell, mesh, part_kwargs=part_kwargs)
+    lowered = bundle.lower()
+    rec["lower_s"] = time.time() - t0
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = time.time() - t1
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+    }
+    cost = compiled.cost_analysis()
+    rec["cost"] = summarize_cost(cost)
+    rec["collectives"] = collective_bytes_from_hlo(compiled.as_text())
+    rec["roofline_raw"] = roofline_terms(
+        rec["cost"], rec["collectives"], n_chips, HW_V5E)
+    # analytic (model-based) counterparts: MODEL_FLOPS ratio + memory term
+    mf = model_flops(cfg, cell)
+    hlo_total = rec["roofline_raw"]["total_flops"]
+    rec["model_flops"] = mf
+    rec["model_flops_ratio"] = mf / hlo_total if hlo_total else None
+    amem = analytic_memory_bytes(cfg, cell, n_chips)
+    rec["t_memory_model_s"] = amem / HW_V5E.hbm_bw
+    rec["analytic_mem_bytes_per_dev"] = amem
+    if verbose:
+        m = rec["memory"]
+        per_dev = (m["argument_bytes"] or 0) / n_chips / 2**30
+        print(f"[dryrun] {arch:24s} {shape:12s} {mesh_name:8s} "
+              f"lower={rec['lower_s']:6.1f}s compile={rec['compile_s']:6.1f}s "
+              f"args/dev={per_dev:7.2f}GiB flops={rec['cost'].get('flops', 0):.3e}")
+    return rec
+
+
+def save(rec: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    tag = "" if rec["tag"] == "baseline" else f"__{rec['tag']}"
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+    (ART / name).write_text(json.dumps(rec, indent=2, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="v-E: sequence-parallel activations")
+    ap.add_argument("--attn-baseline", action="store_true",
+                    help="reproduce pre-v-A attention sharding (hd fallback)")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="v-B: shard_map expert-parallel MoE dispatch")
+    ap.add_argument("--bf16-reduce", action="store_true",
+                    help="v-D: bf16 partial-sum collectives")
+    ap.add_argument("--seq-shard-kv", action="store_true",
+                    help="v-C: sequence-sharded decode KV cache")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else C.ARCHS
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+    part_kwargs = {}
+    if args.seq_shard:
+        part_kwargs["seq_shard_activations"] = True
+    if args.attn_baseline:
+        part_kwargs["attn_head_sharding_only"] = False
+    if args.moe_ep:
+        part_kwargs["moe_ep"] = True
+    if args.bf16_reduce:
+        part_kwargs["bf16_reduce"] = True
+    if args.seq_shard_kv:
+        part_kwargs["seq_shard_kv_decode"] = True
+    part_kwargs = part_kwargs or None
+
+    failures = []
+    for arch in archs:
+        shapes = [args.shape] if args.shape else C.applicable_shapes(arch)
+        for shape in shapes:
+            if shape not in C.applicable_shapes(arch):
+                print(f"[dryrun] SKIP {arch} {shape} (long-context needs "
+                      f"sub-quadratic attention; see DESIGN.md §6)")
+                continue
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, mp,
+                                   part_kwargs=part_kwargs, tag=args.tag)
+                    save(rec)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} {shape} mp={mp}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+    print("[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

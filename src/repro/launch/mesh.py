@@ -1,0 +1,69 @@
+"""Production meshes + elastic re-mesh planning.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state). Single pod = 16x16 = 256 chips ("data","model");
+multi-pod = 2x16x16 = 512 chips ("pod","data","model").
+
+``plan_elastic_mesh`` supports fault tolerance: given the number of
+*surviving* devices after failures, pick the largest factorizable mesh that
+preserves the model axis (TP groups must stay intact — a TP group losing one
+chip loses its shard of every weight), shrinking the data axis instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence] = None):
+    if devices is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    import numpy as np
+    dev = np.asarray(devices)[: int(np.prod(shape))].reshape(tuple(shape))
+    from jax.sharding import Mesh
+    return Mesh(dev, tuple(axes))
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    used_devices: int
+    dropped_devices: int
+
+    @property
+    def dp_degree(self) -> int:
+        return self.used_devices // self.shape[-1]
+
+
+def plan_elastic_mesh(surviving: int, model_parallel: int = 16,
+                      pods: int = 1) -> ElasticPlan:
+    """Largest usable mesh after failures.
+
+    TP degree is preserved (checkpoint weight shards stay valid); the data
+    axis shrinks to floor(surviving / model_parallel). Remaining chips idle
+    until the failed hosts are replaced (standard elastic-DP policy).
+    """
+    if surviving < model_parallel:
+        raise ValueError(
+            f"fewer surviving devices ({surviving}) than one TP group "
+            f"({model_parallel}); cannot form a mesh")
+    dp = surviving // model_parallel
+    used = dp * model_parallel
+    if pods > 1 and dp % pods == 0:
+        shape = (pods, dp // pods, model_parallel)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (dp, model_parallel)
+        axes = ("data", "model")
+    return ElasticPlan(shape=shape, axes=axes, used_devices=used,
+                       dropped_devices=surviving - used)

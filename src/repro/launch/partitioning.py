@@ -1,0 +1,362 @@
+"""Sharding rules: params (TP + size-gated FSDP), optimizer state (ZeRO-1),
+activations (logical names), batches and KV caches — per architecture and
+per shape cell.
+
+Strategy (DESIGN.md §5):
+  * TP over "model" (16): attention heads / FFN hidden / vocab / SSM inner
+    channels / MoE experts (EP when E % tp == 0, expert-internal TP
+    otherwise). Archs whose head counts don't divide TP fall back per-tensor
+    (e.g. Gemma H=8 -> shard head_dim; KV heads < tp -> replicate KV, the
+    standard Megatron GQA duplication).
+  * FSDP over "data" for any parameter above a size threshold (grok-1's
+    expert stacks don't fit at TP-only sharding); ZeRO-1 = same rule with a
+    ~1 MiB threshold applied to the f32 Adam moments.
+  * Batch over ("pod","data") when divisible; the 500k-decode cell (B=1)
+    shards the KV cache over sequence instead (context parallelism).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.lm.config import LMConfig, ShapeCell
+
+
+def _prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclasses.dataclass
+class Partitioner:
+    mesh: Mesh
+    cfg: LMConfig
+    mode: str = "train"                  # train | prefill | decode
+    fsdp_threshold: int = 64 * 2**20     # bytes; params above this get FSDP
+    zero_threshold: int = 1 * 2**20      # bytes; moments above this: ZeRO-1
+    seq_shard_activations: bool = False  # sequence parallelism (perf v-E)
+    # perf iteration flags (EXPERIMENTS.md §Perf). Defaults = tuned config;
+    # pass False to reproduce the recorded baseline.
+    attn_head_sharding_only: bool = True   # v-A: replicate attn when H % tp
+    seq_shard_kv_decode: bool = False      # v-C: S-sharded cache + partial softmax
+    moe_ep: bool = False                   # v-B: shard_map EP all-to-all MoE
+    bf16_reduce: bool = False              # v-D: bf16 partial-sum collectives
+
+    # ------------------------------------------------------------ axes
+    @property
+    def tp_axis(self) -> str:
+        return "model"
+
+    @property
+    def fsdp_axis(self) -> str:
+        return "data"
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp(self) -> int:
+        return _prod(self.mesh.shape[a] for a in self.dp_axes)
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape[self.fsdp_axis]
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------ params
+    def _base_param_spec(self, path: str, shape: Tuple[int, ...]) -> list:
+        """TP assignment on the *unstacked* shape; returns a mutable list."""
+        tp, ax = self.tp, self.tp_axis
+        spec: list = [None] * len(shape)
+        leaf = path.split("/")[-1]
+
+        def try_axis(*cands):
+            for c in cands:
+                if shape[c] % tp == 0:
+                    spec[c] = ax
+                    return True
+            return False
+
+        if leaf in ("embed", "lm_head"):
+            # vocab TP (padded to a multiple of 128)
+            vocab_dim = 0 if leaf == "embed" else 1
+            try_axis(vocab_dim)
+        elif leaf == "frontend_proj":
+            try_axis(1)
+        elif leaf == "wq":
+            if self.attn_head_sharding_only and self.mode != "decode":
+                # v-A: H % tp != 0 -> REPLICATE attention, TP only the MLP.
+                # hd-sharding wq against replicated KV was measured to emit a
+                # [B,H,S,S] partial-score all-reduce per layer (27.7 TB/dev
+                # on qwen3-14b prefill_32k — EXPERIMENTS §Perf).
+                try_axis(1)
+            else:
+                try_axis(1, 2)                 # heads, else head_dim
+        elif leaf in ("wk", "wv"):
+            if self.mode == "decode" and not self.seq_shard_kv_decode:
+                # decode: KV-cache memory dominates; shard KV heads, else
+                # head_dim (partial-score all-reduce — a tracked §Perf item)
+                try_axis(1, 2)
+            else:
+                # train/prefill (and v-C decode): KV heads if divisible,
+                # else REPLICATE (Megatron GQA duplication)
+                try_axis(1)
+        elif leaf == "wo":
+            if self.attn_head_sharding_only and self.mode != "decode":
+                try_axis(0)
+            else:
+                try_axis(0, 1)
+        elif leaf in ("w_gate", "w_up"):
+            if len(shape) == 3:                # MoE [E, D, F]: EP else TP
+                try_axis(0, 2)
+            else:
+                try_axis(1)
+        elif leaf == "w_down":
+            if len(shape) == 3:                # MoE [E, F, D]
+                try_axis(0, 1)
+            else:
+                try_axis(0)
+        elif leaf in ("wi_z", "wi_x", "wi_bc", "wi_dt"):
+            try_axis(1)
+        elif leaf in ("conv_w_x", "conv_w_bc"):
+            try_axis(1)
+        elif leaf in ("conv_b_x", "conv_b_bc", "gate_norm"):
+            try_axis(0)
+        elif leaf == "router":
+            pass                                # replicate
+        # norms / A_log / dt_bias / D_skip / scalars: replicate
+        if leaf == "wo" and len(shape) == 2:    # mamba out proj [din, D]
+            spec[:] = [None] * len(shape)
+            try_axis(0)
+        return spec
+
+    def _apply_fsdp(self, spec: list, shape: Tuple[int, ...], nbytes: int,
+                    threshold: int) -> list:
+        if nbytes < threshold:
+            return spec
+        ds = self.data_size
+        # largest unsharded dim divisible by the data axis
+        cands = sorted(
+            (i for i in range(len(shape))
+             if spec[i] is None and shape[i] % ds == 0),
+            key=lambda i: -shape[i])
+        if cands:
+            spec[cands[0]] = self.fsdp_axis
+        return spec
+
+    def param_spec(self, path: str, leaf) -> P:
+        shape = tuple(leaf.shape)
+        stacked = path.startswith("stages/") or "/stages/" in path
+        inner = shape[1:] if stacked else shape
+        spec = self._base_param_spec(path, inner)
+        nbytes = _prod(shape) * jnp.dtype(leaf.dtype).itemsize
+        spec = self._apply_fsdp(spec, inner, nbytes, self.fsdp_threshold)
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    def opt_spec(self, path: str, leaf) -> P:
+        """ZeRO-1: moments follow params but with an aggressive FSDP gate."""
+        shape = tuple(leaf.shape)
+        stacked = path.startswith("stages/") or "/stages/" in path
+        inner = shape[1:] if stacked else shape
+        spec = self._base_param_spec(path, inner)
+        nbytes = _prod(shape) * 4
+        spec = self._apply_fsdp(spec, inner, nbytes, self.zero_threshold)
+        if stacked:
+            spec = [None] + spec
+        return P(*spec)
+
+    def _tree_specs(self, tree, fn) -> Any:
+        def path_str(kp):
+            parts = []
+            for k in kp:
+                if hasattr(k, "key"):
+                    parts.append(str(k.key))
+                elif hasattr(k, "idx"):
+                    parts.append(str(k.idx))
+                elif hasattr(k, "name"):
+                    parts.append(str(k.name))
+                else:
+                    parts.append(str(k))
+            return "/".join(parts)
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: self.named(fn(path_str(kp), leaf)), tree)
+
+    def param_shardings(self, params_tree) -> Any:
+        return self._tree_specs(params_tree, self.param_spec)
+
+    def state_shardings(self, state_tree) -> Any:
+        """TrainState: params use param rules; mu/nu use ZeRO rules."""
+        def fn(path, leaf):
+            if path.startswith("mu/") or path.startswith("nu/"):
+                return self.opt_spec(path.split("/", 1)[1], leaf)
+            if path.startswith("params/"):
+                return self.param_spec(path.split("/", 1)[1], leaf)
+            return P()
+        return self._tree_specs(state_tree, fn)
+
+    # ------------------------------------------------------------ data
+    def batch_dims(self, b: int) -> Optional[Tuple[str, ...]]:
+        """Mesh axes to shard the batch dim over (None = replicate)."""
+        if b % self.dp == 0:
+            return self.dp_axes
+        if b % self.data_size == 0:
+            return (self.fsdp_axis,)
+        return None
+
+    def batch_spec(self, shape: Tuple[int, ...]) -> P:
+        ba = self.batch_dims(shape[0])
+        spec = [ba] + [None] * (len(shape) - 1)
+        if ba is None and len(shape) >= 2 and shape[1] % self.data_size == 0:
+            spec[1] = self.fsdp_axis       # sequence sharding fallback
+        return P(*spec)
+
+    def cache_spec(self, path: str, leaf) -> P:
+        """KV / SSM cache sharding. Shapes carry a leading stage-repeat dim."""
+        shape = tuple(leaf.shape)
+        tp, ds = self.tp, self.data_size
+        leaf_name = path.split("/")[-1]
+        spec: list = [None] * len(shape)
+        if leaf_name in ("k", "v"):
+            _, b, s, kv, hd = shape
+            ba = self.batch_dims(b)
+            if ba is not None:
+                spec[1] = ba
+            elif s % ds == 0 and not self.seq_shard_kv_decode:
+                spec[2] = self.fsdp_axis   # context parallelism (B too small)
+            if self.seq_shard_kv_decode and self.mode == "decode" \
+                    and s % tp == 0:
+                # v-C: sequence-sharded cache; attention combines partial
+                # softmax stats across the model axis (tiny psum). Decode
+                # only — on prefill bundles this sharding was measured to
+                # force large K/V-write reshards (§Perf).
+                spec[2] = self.tp_axis
+            elif kv % tp == 0:
+                spec[3] = self.tp_axis
+            elif hd % tp == 0:
+                spec[4] = self.tp_axis
+        elif leaf_name == "conv":
+            _, b, k, c = shape
+            ba = self.batch_dims(b)
+            if ba is not None:
+                spec[1] = ba
+            if c % tp == 0:
+                spec[3] = self.tp_axis
+        elif leaf_name == "state":
+            _, b, h, p_, n = shape
+            ba = self.batch_dims(b)
+            if ba is not None:
+                spec[1] = ba
+            if h % tp == 0:
+                spec[2] = self.tp_axis
+        return P(*spec)
+
+    def cache_shardings(self, cache_tree) -> Any:
+        return self._tree_specs(cache_tree, self.cache_spec)
+
+    # ------------------------------------------------------------ logical
+    def logical_resolver(self) -> "LogicalResolver":
+        """Resolver installed via nn.common.sharding_context. It is callable
+        (sharding constraints by logical name) and carries the mesh/axis
+        metadata the shard_map code paths (EP-MoE, v-C decode) need."""
+        return LogicalResolver(self)
+
+    def _resolve_fn(self):
+        mesh, tp, ax = self.mesh, self.tp, self.tp_axis
+        ds, fa = self.data_size, self.fsdp_axis
+
+        def resolve(name: str, x: jnp.ndarray) -> jnp.ndarray:
+            shape = x.shape
+            spec: list = [None] * len(shape)
+            if name == "activation":            # [B, S, D]
+                ba = self.batch_dims(shape[0])
+                if ba is not None:
+                    spec[0] = ba
+                elif shape[1] % ds == 0:
+                    spec[1] = fa
+                if self.seq_shard_activations and spec[1] is None \
+                        and shape[1] % tp == 0 and shape[1] > 1:
+                    spec[1] = ax
+            elif name == "kv":                  # [B, S, KV, hd]
+                ba = self.batch_dims(shape[0])
+                if ba is not None:
+                    spec[0] = ba
+                elif shape[1] % ds == 0:
+                    spec[1] = fa
+                if shape[2] % tp == 0:
+                    spec[2] = ax
+                elif shape[3] % tp == 0:
+                    spec[3] = ax
+            elif name == "ffn_hidden":          # [B, S, F]
+                ba = self.batch_dims(shape[0])
+                if ba is not None:
+                    spec[0] = ba
+                if shape[-1] % tp == 0:
+                    spec[-1] = ax
+            elif name == "attn_out_heads":      # [B, Q, H, hd]
+                ba = self.batch_dims(shape[0])
+                if ba is not None:
+                    spec[0] = ba
+                if shape[2] % tp == 0:
+                    spec[2] = ax
+                elif shape[3] % tp == 0:
+                    spec[3] = ax
+            elif name == "ssm_heads":           # [B, L, nh, hd]
+                ba = self.batch_dims(shape[0])
+                if ba is not None:
+                    spec[0] = ba
+                if shape[2] % tp == 0:
+                    spec[2] = ax
+            elif name == "moe_dispatch":        # [E, C, D]
+                if shape[0] % tp == 0:
+                    spec[0] = ax
+                if shape[1] % self.dp == 0:
+                    spec[1] = self.dp_axes
+            elif name == "moe_hidden":          # [E, C, F]
+                if shape[0] % tp == 0:
+                    spec[0] = ax
+                elif shape[2] % tp == 0:
+                    spec[2] = ax
+                if shape[1] % self.dp == 0:
+                    spec[1] = self.dp_axes
+            else:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+
+        return resolve
+
+
+class LogicalResolver:
+    """Callable sharding resolver + mesh metadata for shard_map paths."""
+
+    def __init__(self, part: Partitioner):
+        self._fn = part._resolve_fn()
+        self.mesh = part.mesh
+        self.tp_axis = part.tp_axis
+        self.tp = part.tp
+        self.dp_axes = part.dp_axes
+        self.dp = part.dp
+        self.batch_dims = part.batch_dims
+        self.seq_shard_kv_decode = part.seq_shard_kv_decode
+        self.moe_ep = part.moe_ep
+        self.bf16_reduce = part.bf16_reduce
+
+    def __call__(self, name, x):
+        return self._fn(name, x)

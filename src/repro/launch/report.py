@@ -1,0 +1,142 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.report [--tag baseline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "baseline") -> List[Dict]:
+    recs = []
+    for p in sorted(ART.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag", "baseline") == tag:
+            recs.append(rec)
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = [
+        f"| arch | shape | mode | lower | compile | args/dev GiB | temp/dev GiB | HLO flops/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {r['lower_s']:.1f}s | {r['compile_s']:.1f}s "
+            f"| {fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} "
+            f"| {r['collectives']['flops']:.2e} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = [
+        "| arch | shape | t_compute | t_mem(HLO) | t_mem(model) | t_coll | dominant | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        t = r["roofline_raw"]
+        ratio = r.get("model_flops_ratio")
+        # roofline fraction: useful model flops time / dominant bound time
+        t_model_compute = (r.get("model_flops", 0) / r["chips"]) / 197e12
+        bound = max(t["t_compute_s"], r.get("t_memory_model_s", 0),
+                    t["t_collective_s"])
+        frac = t_model_compute / bound if bound else 0.0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(r.get('t_memory_model_s'))} "
+            f"| {fmt_s(t['t_collective_s'])} | **{t['dominant']}** "
+            f"| {ratio:.2f} | {frac:.2f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(r.get('t_memory_model_s'))} "
+            f"| {fmt_s(t['t_collective_s'])} | **{t['dominant']}** | - | - |")
+    return "\n".join(out)
+
+
+def collective_breakdown(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    rows.sort(key=lambda r: -r["collectives"].get("collective_bytes", 0))
+    out = ["| arch | shape | total GB/dev | all-reduce | all-gather | reduce-scatter | all-to-all | permute |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows[:12]:
+        c = r["collectives"]
+        gb = lambda k: f"{c.get(k, 0)/1e9:.1f}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {gb('collective_bytes')} "
+            f"| {gb('coll_all-reduce')} | {gb('coll_all-gather')} "
+            f"| {gb('coll_reduce-scatter')} | {gb('coll_all-to-all')} "
+            f"| {gb('coll_collective-permute')} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb_cells(recs: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline fraction / most collective-bound / most
+    technique-representative (the biggest MoE = segment-MM workload)."""
+    rows = [r for r in recs if r["mesh"] == "16x16"]
+
+    def frac(r):
+        t = r["roofline_raw"]
+        t_model = (r.get("model_flops", 0) / r["chips"]) / 197e12
+        bound = max(t["t_compute_s"], r.get("t_memory_model_s", 0),
+                    t["t_collective_s"])
+        return t_model / bound if bound else 0.0
+
+    worst = min(rows, key=frac)
+    coll = max(rows, key=lambda r: r["roofline_raw"]["t_collective_s"]
+               / max(1e-12, r["roofline_raw"]["t_compute_s"]))
+    moe = max((r for r in rows if r["arch"] in
+               ("moonshot-v1-16b-a3b", "grok-1-314b", "jamba-v0.1-52b")),
+              key=lambda r: r["roofline_raw"]["t_collective_s"])
+    return {"worst_fraction": worst, "most_collective": coll,
+            "technique_rep": moe}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    recs = load(args.tag)
+    print(f"## Dry-run ({len(recs)} records, tag={args.tag})\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(f"### mesh {mesh}\n")
+        print(dryrun_table(recs, mesh))
+        print()
+    print("## Roofline (single-pod 16x16)\n")
+    print(roofline_table(recs))
+    print("\n### Collective breakdown (top cells)\n")
+    print(collective_breakdown(recs))
+    picks = pick_hillclimb_cells(recs)
+    print("\n### Hillclimb picks")
+    for k, r in picks.items():
+        print(f"- {k}: {r['arch']} x {r['shape']}")
+
+
+if __name__ == "__main__":
+    main()

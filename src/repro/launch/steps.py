@@ -1,0 +1,159 @@
+"""Step builders: train_step / serve_prefill / serve_step per (arch x cell),
+with full sharding trees. ``input_specs`` returns ShapeDtypeStruct stand-ins
+(weak-type-correct, shardable, no device allocation) — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.lm.config import LMConfig, ShapeCell, SHAPES
+from repro.lm.model import TransformerLM
+from repro.launch.partitioning import Partitioner
+from repro.nn.common import sharding_context
+from repro.optim import AdamW, TrainState, cosine_schedule
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: LMConfig, cell: ShapeCell) -> Dict[str, SDS]:
+    """Abstract data inputs for this (arch, cell): tokens/targets or the
+    decode token + index; multimodal archs add stubbed frontend embeddings."""
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs: Dict[str, SDS] = {}
+    if cell.mode == "train":
+        specs["tokens"] = SDS((b, s), jnp.int32)
+        specs["targets"] = SDS((b, s), jnp.int32)
+    elif cell.mode == "prefill":
+        specs["tokens"] = SDS((b, s), jnp.int32)
+    else:  # decode: one new token against a seq_len cache
+        specs["token"] = SDS((b, 1), jnp.int32)
+        specs["index"] = SDS((), jnp.int32)
+    if cfg.encoder_layers:
+        specs["frontend"] = SDS((b, cfg.encoder_seq, cfg.d_model), dt)
+    elif cfg.frontend_tokens:
+        specs["frontend"] = SDS((b, cfg.frontend_tokens, cfg.frontend_dim), dt)
+    return specs
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower/compile/run one (arch x cell) step."""
+
+    name: str
+    fn: Any                      # jitted function
+    abstract_args: Tuple         # ShapeDtypeStructs matching fn's signature
+    partitioner: Partitioner
+    model: TransformerLM
+    mode: str
+
+    def lower(self):
+        return self.fn.lower(*self.abstract_args)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_step(
+    cfg: LMConfig,
+    cell: ShapeCell,
+    mesh,
+    *,
+    remat: bool = True,
+    donate: bool = True,
+    part_kwargs: Optional[dict] = None,
+) -> StepBundle:
+    model = TransformerLM(cfg, remat=remat)
+    part = Partitioner(mesh, cfg, mode=cell.mode, **(part_kwargs or {}))
+    resolver = part.logical_resolver()
+    data = input_specs(cfg, cell)
+    b, s = cell.global_batch, cell.seq_len
+
+    a_params = jax.eval_shape(model.init, jax.random.key(0))
+    params_sh = part.param_shardings(a_params)
+
+    def data_sharding(tree):
+        return jax.tree.map(
+            lambda x: NamedSharding(mesh, part.batch_spec(x.shape)), tree)
+
+    if cell.mode == "train":
+        opt = AdamW(learning_rate=cosine_schedule(3e-4, 200, 20_000))
+        a_state = jax.eval_shape(opt.init, a_params)
+        state_sh = part.state_shardings(a_state)
+        batch = {k: v for k, v in data.items()}
+        batch_sh = data_sharding(batch)
+
+        def train_step(state: TrainState, batch):
+            with sharding_context(resolver):
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss, has_aux=True)(state.params, batch)
+                new_state = opt.update(grads, state)
+            out = {"loss": loss, **metrics}
+            return new_state, out
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, _replicated(mesh)),
+            donate_argnums=(0,) if donate else (),
+        )
+        return StepBundle(f"{cfg.name}:{cell.name}:train", fn,
+                          (a_state, batch), part, model, "train")
+
+    if cell.mode == "prefill":
+        tokens = data["tokens"]
+        frontend = data.get("frontend")
+
+        def serve_prefill(params, tokens, frontend=None):
+            with sharding_context(resolver):
+                return model.prefill(params, tokens, frontend=frontend,
+                                     cache_len=s)
+
+        a_cache = jax.eval_shape(lambda: model.init_cache(b, s))
+        cache_sh = part.cache_shardings(a_cache)
+        in_sh = [params_sh, data_sharding(tokens)]
+        args = [a_params, tokens]
+        if frontend is not None:
+            in_sh.append(data_sharding(frontend))
+            args.append(frontend)
+        fn = jax.jit(
+            serve_prefill,
+            in_shardings=tuple(in_sh),
+            out_shardings=(_replicated(mesh), cache_sh),
+        )
+        return StepBundle(f"{cfg.name}:{cell.name}:prefill", fn,
+                          tuple(args), part, model, "prefill")
+
+    # decode
+    token = data["token"]
+    index = data["index"]
+    frontend = data.get("frontend")
+    a_cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    cache_sh = part.cache_shardings(a_cache)
+
+    def serve_step(params, token, index, caches, frontend=None):
+        with sharding_context(resolver):
+            return model.decode_step(params, token, index, caches,
+                                     frontend=frontend)
+
+    in_sh = [params_sh, data_sharding(token), _replicated(mesh), cache_sh]
+    args = [a_params, token, index, a_cache]
+    if frontend is not None:
+        in_sh.append(data_sharding(frontend))
+        args.append(frontend)
+    fn = jax.jit(
+        serve_step,
+        in_shardings=tuple(in_sh),
+        out_shardings=(_replicated(mesh), cache_sh),
+        donate_argnums=(3,) if donate else (),
+    )
+    return StepBundle(f"{cfg.name}:{cell.name}:decode", fn,
+                      tuple(args), part, model, "decode")

@@ -1,0 +1,349 @@
+"""TransformerLM: one model class covering all 10 assigned architectures.
+
+* Layers run as ``lax.scan`` over each stage's repeat dimension (stacked
+  params) with optional remat — bounded HLO for the 512-device dry-run.
+* ``loss`` computes the LM cross-entropy with a **sequence-chunked head**:
+  logits for 262k-vocab archs never materialize for the full sequence.
+* ``prefill`` / ``decode_step`` implement KV-cache (attention) and
+  conv+state cache (Mamba) serving. Cross-attention memory (VLM image
+  patches, Whisper encoder frames) is passed as ``memory``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.config import LMConfig, LayerSpec, Stage
+from repro.nn import attention as A
+from repro.nn import mlp as M
+from repro.nn import moe as MOE
+from repro.nn import ssm as S
+from repro.nn.common import dense_init, rms_norm, shard, softcap
+
+
+def padded_vocab(v: int, multiple: int = 128) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+class TransformerLM:
+    def __init__(self, cfg: LMConfig, *, remat: bool = True,
+                 loss_chunk: int = 2048, moe_aux_coef: float = 0.01):
+        self.cfg = cfg
+        self.remat = remat
+        self.loss_chunk = loss_chunk
+        self.moe_aux_coef = moe_aux_coef
+        self.vp = padded_vocab(cfg.vocab_size)
+        self.dtype = jnp.dtype(cfg.dtype)
+
+    # ------------------------------------------------------------ params
+    def _init_layer(self, key, spec: LayerSpec) -> Dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 6)
+        p: Dict[str, Any] = {"norm": jnp.ones((cfg.d_model,), dt)}
+        if spec.kind in ("self_attn", "cross_attn"):
+            p["attn"] = A.init_attention(ks[0], cfg, dt,
+                                         cross=spec.kind == "cross_attn")
+            if spec.dec_cross:
+                p["cross_norm"] = jnp.ones((cfg.d_model,), dt)
+                p["cross"] = A.init_attention(ks[1], cfg, dt, cross=True)
+        elif spec.kind == "mamba":
+            p["mamba"] = S.init_mamba(ks[0], cfg, dt)
+        if spec.kind != "mamba" or cfg.d_ff > 0:
+            p["mlp_norm"] = jnp.ones((cfg.d_model,), dt)
+            if spec.moe:
+                p["moe"] = MOE.init_moe(ks[2], cfg.d_model,
+                                        cfg.moe_d_ff or cfg.d_ff,
+                                        cfg.num_experts, dt)
+            elif cfg.d_ff > 0:
+                p["mlp"] = M.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dt)
+            else:
+                del p["mlp_norm"]
+        return p
+
+    def _init_stage(self, key, stage: Stage) -> Dict:
+        def one(k):
+            kk = jax.random.split(k, len(stage.pattern))
+            return {f"l{i}": self._init_layer(kk[i], spec)
+                    for i, spec in enumerate(stage.pattern)}
+        keys = jax.random.split(key, stage.repeats)
+        return jax.vmap(one)(keys)
+
+    def init(self, key) -> Dict:
+        cfg, dt = self.cfg, self.dtype
+        ks = jax.random.split(key, 8 + len(cfg.stages))
+        params: Dict[str, Any] = {
+            "embed": dense_init(ks[0], (self.vp, cfg.d_model), dt,
+                                fan_in=cfg.d_model),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "stages": [self._init_stage(ks[3 + i], st)
+                       for i, st in enumerate(cfg.stages)],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[1], (cfg.d_model, self.vp), dt)
+        if cfg.frontend_dim:
+            params["frontend_proj"] = dense_init(
+                ks[2], (cfg.frontend_dim, cfg.d_model), dt)
+        if cfg.encoder_layers:
+            enc_stage = Stage((LayerSpec(kind="self_attn"),),
+                              cfg.encoder_layers)
+            params["encoder"] = {
+                "stages": [self._init_stage(ks[-1], enc_stage)],
+                "final_norm": jnp.ones((cfg.d_model,), dt),
+            }
+        return params
+
+    # ------------------------------------------------------------ layers
+    def _apply_layer(self, spec: LayerSpec, p: Dict, x, positions, *,
+                     memory=None, cache=None, cache_index=None,
+                     prefill=False, causal=True):
+        cfg = self.cfg
+        new_cache = {}
+        aux = jnp.float32(0.0)
+        if spec.kind == "mamba":
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            # prefill uses the chunked path and emits a fresh cache;
+            # decode consumes the rolling conv window + recurrent state
+            m_cache = cache.get("mamba") if (cache and not prefill) else None
+            h, mc = S.mamba_forward(p["mamba"], h, cfg, cache=m_cache,
+                                    return_cache=prefill)
+            if mc is not None:
+                new_cache["mamba"] = mc
+            x = x + h
+        elif spec.kind == "cross_attn":
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            ckv = cache.get("cross") if (cache and not prefill) else None
+            h, ck = A.attention(p["attn"], h, cfg, spec, positions,
+                                memory=memory, cross_kv=ckv,
+                                store_cross=prefill, causal=False)
+            if ck is not None:
+                new_cache["cross"] = ck
+            x = x + h
+        else:  # self_attn
+            h = rms_norm(x, p["norm"], cfg.norm_eps)
+            kv_cache = cache.get("attn") if cache else None
+            h, kc = A.attention(p["attn"], h, cfg, spec, positions,
+                                kv_cache=kv_cache, cache_index=cache_index,
+                                causal=causal)
+            if kc is not None:
+                new_cache["attn"] = kc
+            x = x + h
+            if spec.dec_cross:
+                h = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+                ckv = cache.get("cross") if (cache and not prefill) else None
+                h, ck = A.attention(p["cross"], h, cfg, spec, positions,
+                                    memory=memory, cross_kv=ckv,
+                                    store_cross=prefill, causal=False)
+                if ck is not None:
+                    new_cache["cross"] = ck
+                x = x + h
+        if "mlp_norm" in p:
+            h = rms_norm(x, p["mlp_norm"], cfg.norm_eps)
+            if "moe" in p:
+                h, moe_aux = MOE.moe_ffn(p["moe"], h, cfg.num_experts,
+                                         cfg.experts_per_tok,
+                                         cfg.capacity_factor)
+                aux = aux + moe_aux["lb_loss"]
+            else:
+                h = M.mlp(p["mlp"], h)
+            x = x + h
+        x = shard("activation", x)
+        return x, new_cache, aux
+
+    def _stage_cache_init(self, stage: Stage, batch: int, cache_len: int):
+        cfg, dt = self.cfg, self.dtype
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        mem_len = cfg.encoder_seq or cfg.frontend_tokens
+        out = []
+        for spec in stage.pattern:
+            c = {}
+            if spec.kind == "self_attn":
+                c["attn"] = {
+                    "k": jnp.zeros((stage.repeats, batch, cache_len, kv, hd), dt),
+                    "v": jnp.zeros((stage.repeats, batch, cache_len, kv, hd), dt),
+                }
+            if (spec.kind == "cross_attn" or spec.dec_cross) and mem_len:
+                # §Perf v-G: cross K/V cached at prefill; decode skips
+                # recomputing (and re-encoding) the static memory
+                c["cross"] = {
+                    "k": jnp.zeros((stage.repeats, batch, mem_len, kv, hd), dt),
+                    "v": jnp.zeros((stage.repeats, batch, mem_len, kv, hd), dt),
+                }
+            elif spec.kind == "mamba":
+                conv_ch = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+                c["mamba"] = {
+                    "conv": jnp.zeros(
+                        (stage.repeats, batch, cfg.ssm_conv - 1, conv_ch), dt),
+                    "state": jnp.zeros(
+                        (stage.repeats, batch, cfg.ssm_heads,
+                         cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                }
+            out.append(c)
+        return out
+
+    def init_cache(self, batch: int, cache_len: int):
+        return [self._stage_cache_init(st, batch, cache_len)
+                for st in self.cfg.stages]
+
+    # ------------------------------------------------------------ stages
+    def _run_stage(self, stage: Stage, sp, x, positions, *, memory=None,
+                   caches=None, cache_index=None, mode="train"):
+        """mode: train | prefill | decode. caches: list per pattern-layer of
+        stacked cache pytrees (leading dim = repeats)."""
+        specs = stage.pattern
+
+        if mode == "train":
+            def body(carry, layer_params):
+                x, aux = carry
+                for i, spec in enumerate(specs):
+                    x, _, a = self._apply_layer(spec, layer_params[f"l{i}"],
+                                                x, positions, memory=memory)
+                    aux = aux + a
+                return (x, aux), None
+            if self.remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), sp)
+            return x, None, aux
+
+        # prefill and decode share the cache-threading scan body; prefill
+        # writes the whole prompt at index 0 and lets Mamba layers emit
+        # fresh (conv, state) caches from the chunked path.
+        prefill = mode == "prefill"
+
+        def body(carry, inp):
+            x, aux = carry
+            layer_params, cache_slices = inp
+            new_slices = []
+            for i, spec in enumerate(specs):
+                x, nc, a = self._apply_layer(
+                    spec, layer_params[f"l{i}"], x, positions,
+                    memory=memory,
+                    cache=cache_slices[i] if cache_slices[i] else None,
+                    cache_index=0 if prefill else cache_index,
+                    prefill=prefill)
+                aux = aux + a
+                # merge: layers may update only part of their cache entry
+                # (e.g. self-attn K/V while the cross K/V stays as-is)
+                merged = dict(cache_slices[i]) if cache_slices[i] else {}
+                merged.update(nc or {})
+                new_slices.append(merged)
+            return (x, aux), new_slices
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), (sp, caches))
+        return x, new_caches, aux
+
+    # ------------------------------------------------------------ encoder
+    def _encode(self, params, frames):
+        """Whisper-style encoder over provided frame embeddings [B, M, D]."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        stage = Stage((LayerSpec(kind="self_attn"),), cfg.encoder_layers)
+        pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        x = frames
+
+        def body(carry, layer_params):
+            x, aux = carry
+            spec = LayerSpec(kind="self_attn")
+            x, _, a = self._apply_layer(spec, layer_params["l0"], x, pos,
+                                        causal=False)
+            return (x, aux + a), None
+
+        (x, _), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                 enc["stages"][0])
+        return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+    def _memory(self, params, frontend: Optional[jnp.ndarray]):
+        """Resolve cross-attention memory from stubbed frontend embeddings."""
+        cfg = self.cfg
+        if frontend is None:
+            return None
+        if cfg.encoder_layers:
+            return self._encode(params, frontend)
+        if cfg.frontend_dim:
+            return frontend @ params["frontend_proj"]
+        return frontend
+
+    # ------------------------------------------------------------ forward
+    def backbone(self, params, tokens, *, frontend=None, positions=None,
+                 mode="train", caches=None, cache_index=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)   # [S], batch-shared
+        x = params["embed"][tokens].astype(self.dtype)
+        if cfg.scale_embed:
+            x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(self.dtype)
+        x = shard("activation", x)
+        if mode == "decode" and caches is not None:
+            memory = None      # cross K/V cached at prefill (§Perf v-G)
+        else:
+            memory = self._memory(params, frontend)
+        aux = jnp.float32(0.0)
+        new_caches = []
+        for i, stage in enumerate(cfg.stages):
+            x, nc, a = self._run_stage(
+                stage, params["stages"][i], x, positions, memory=memory,
+                caches=caches[i] if caches is not None else None,
+                cache_index=cache_index, mode=mode)
+            aux = aux + a
+            new_caches.append(nc)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_caches, aux
+
+    def logits(self, params, hidden):
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        lg = jnp.einsum("bsd,dv->bsv", hidden, head).astype(jnp.float32)
+        return softcap(lg, self.cfg.logit_softcap)
+
+    # ------------------------------------------------------------ loss
+    def loss(self, params, batch: Dict) -> Tuple[jnp.ndarray, Dict]:
+        """batch: tokens [B,S], targets [B,S], optional frontend embeds."""
+        tokens, targets = batch["tokens"], batch["targets"]
+        hidden, _, aux = self.backbone(params, tokens,
+                                       frontend=batch.get("frontend"),
+                                       mode="train")
+        b, s, d = hidden.shape
+        chunk = min(self.loss_chunk, s)
+        assert s % chunk == 0
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+        def chunk_loss(carry, inp):
+            h_c, t_c = inp                       # [chunk, B, D], [chunk, B]
+            lg = jnp.einsum("cbd,dv->cbv", h_c, head).astype(jnp.float32)
+            lg = softcap(lg, self.cfg.logit_softcap)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, t_c[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum(lse - gold), None
+
+        h_cs = hidden.swapaxes(0, 1).reshape(s // chunk, chunk, b, d)
+        t_cs = targets.swapaxes(0, 1).reshape(s // chunk, chunk, b)
+        total, _ = jax.lax.scan(chunk_loss, jnp.float32(0.0), (h_cs, t_cs))
+        nll = total / (b * s)
+        loss = nll + self.moe_aux_coef * aux / max(1, self.cfg.num_layers)
+        return loss, {"nll": nll, "moe_aux": aux}
+
+    # ------------------------------------------------------------ serving
+    def prefill(self, params, tokens, *, frontend=None, cache_len=None):
+        """Run the prompt, build the cache, return (logits_last, caches)."""
+        cache_len = cache_len or tokens.shape[1]
+        caches = self.init_cache(tokens.shape[0], cache_len)
+        hidden, caches, _ = self.backbone(params, tokens, frontend=frontend,
+                                          mode="prefill", caches=caches)
+        lg = self.logits(params, hidden[:, -1:])
+        return lg, caches
+
+    def decode_step(self, params, token, index, caches, *, frontend=None):
+        """One-token decode: token [B,1], index scalar (position)."""
+        b = token.shape[0]
+        positions = jnp.full((1,), index, jnp.int32)
+        hidden, new_caches, _ = self.backbone(
+            params, token, frontend=frontend, positions=positions,
+            mode="decode", caches=caches, cache_index=index)
+        return self.logits(params, hidden), new_caches

@@ -1,0 +1,3 @@
+from repro.models.rgcn import rgcn_program  # noqa: F401
+from repro.models.rgat import rgat_program  # noqa: F401
+from repro.models.hgt import hgt_program    # noqa: F401

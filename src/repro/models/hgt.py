@@ -1,0 +1,39 @@
+"""Single-headed HGT layer in Hector inter-operator IR (paper Fig. 2).
+
+    k_n  = h_n W_K[τ(n)]          (nodewise typed linear, ntype segments)
+    q_n  = h_n W_Q[τ(n)]
+    v_n  = h_n W_V[τ(n)]
+    katt = k_src W_A[τ(e)]        (edgewise typed linear -> COMPACT: the
+                                   msg_HGT example of §3.2.2)
+    msg  = v_src W_M[τ(e)]        (COMPACT)
+    att  = softmax_dst( (katt · q_dst) / sqrt(d) )
+    h_v' = Σ_e att_e · msg_e
+"""
+import math
+
+from repro.core.ir import inter_op as I
+
+
+def hgt_program(in_dim: int, out_dim: int) -> I.Program:
+    W_K = I.Weight("W_K", (in_dim, out_dim), indexed_by="ntype")
+    W_Q = I.Weight("W_Q", (in_dim, out_dim), indexed_by="ntype")
+    W_V = I.Weight("W_V", (in_dim, out_dim), indexed_by="ntype")
+    W_A = I.Weight("W_att", (out_dim, out_dim), indexed_by="etype")
+    W_M = I.Weight("W_msg", (out_dim, out_dim), indexed_by="etype")
+    inv_sqrt_d = 1.0 / math.sqrt(out_dim)
+    stmts = [
+        I.NodeCompute("kk", I.TypedLinear(I.NodeFeature("feature"), W_K)),
+        I.NodeCompute("qq", I.TypedLinear(I.NodeFeature("feature"), W_Q)),
+        I.NodeCompute("vv", I.TypedLinear(I.NodeFeature("feature"), W_V)),
+        I.EdgeCompute("katt", I.TypedLinear(I.SrcFeature("kk"), W_A)),
+        I.EdgeCompute("msg", I.TypedLinear(I.SrcFeature("vv"), W_M)),
+        I.EdgeCompute(
+            "att_raw",
+            I.Binary("mul",
+                     I.DotProduct(I.EdgeVar("katt"), I.DstFeature("qq")),
+                     I.Scalar(inv_sqrt_d)),
+        ),
+        I.EdgeSoftmax("att", "att_raw"),
+        I.NodeAggregate("h_out", msg="msg", scale="att"),
+    ]
+    return I.Program(stmts=stmts, outputs=["h_out"], name="hgt")

@@ -1,0 +1,32 @@
+"""Single-headed RGAT layer in Hector inter-operator IR (paper Listing 1).
+
+    hs    = h_src W_r                    (edgewise typed linear -> compactable)
+    atts  = hs · w_s[r]                  (reordering -> h_src (W_r w_s^T))
+    attt  = (h_dst W_r) · w_t[r]         (reordering, dst side)
+    att   = edge_softmax(leaky_relu(atts + attt))
+    h_v'  = Σ_e att_e · hs_e             (fused traversal aggregation)
+"""
+from repro.core.ir import inter_op as I
+
+
+def rgat_program(in_dim: int, out_dim: int, slope: float = 0.01) -> I.Program:
+    W = I.Weight("W_rel", (in_dim, out_dim), indexed_by="etype")
+    w_s = I.Weight("w_att_src", (out_dim,), indexed_by="etype")
+    w_t = I.Weight("w_att_dst", (out_dim,), indexed_by="etype")
+    stmts = [
+        I.EdgeCompute("hs", I.TypedLinear(I.SrcFeature("feature"), W)),
+        I.EdgeCompute("atts", I.DotProduct(I.EdgeVar("hs"), w_s)),
+        I.EdgeCompute(
+            "attt",
+            I.DotProduct(I.TypedLinear(I.DstFeature("feature"), W), w_t),
+        ),
+        I.EdgeCompute(
+            "att_raw",
+            I.Unary("leaky_relu",
+                    I.Binary("add", I.EdgeVar("atts"), I.EdgeVar("attt")),
+                    alpha=slope),
+        ),
+        I.EdgeSoftmax("att", "att_raw"),
+        I.NodeAggregate("h_out", msg="hs", scale="att"),
+    ]
+    return I.Program(stmts=stmts, outputs=["h_out"], name="rgat")

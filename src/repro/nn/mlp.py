@@ -1,0 +1,24 @@
+"""Dense gated-SiLU MLP."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import dense_init, rp_einsum, shard
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def mlp(params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard("ffn_hidden", h)
+    return rp_einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,214 @@
+"""Mamba2 layer via the SSD (state-space duality) chunked algorithm
+(Dao & Gu, arXiv:2405.21060), pure JAX.
+
+Recurrence (per head h, state n, head-dim p):
+    h_t = exp(dt_t·A) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D · x_t
+
+The chunked form computes, per chunk of Q tokens, an intra-chunk quadratic
+"attention-like" term (MXU-friendly batched GEMMs) plus an inter-chunk
+recurrence over chunk states (lax.scan over l/Q steps) — this is the
+TPU-native mapping: the quadratic term saturates the MXU while the scan
+carries only [b,h,p,n] states.
+
+``ssd_sequential`` is the step-by-step oracle used by tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.lm.config import LMConfig
+from repro.nn.common import dense_init, rms_norm, shard
+
+
+def init_mamba(key, cfg: LMConfig, dtype) -> Dict:
+    """Input projections are kept as separate matrices (z / x / BC / dt)
+    rather than one packed [D, 2*din+2g*ns+nh] matrix: TP then shards each
+    output dim cleanly with no mid-shard slice boundaries (DESIGN.md §5)."""
+    d = cfg.d_model
+    din, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    g, kk = cfg.ssm_groups, cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    return {
+        "wi_z": dense_init(ks[6], (d, din), dtype),
+        "wi_x": dense_init(ks[1], (d, din), dtype),
+        "wi_bc": dense_init(ks[2], (d, 2 * g * ns), dtype),
+        "wi_dt": dense_init(ks[3], (d, nh), dtype),
+        "conv_w_x": dense_init(ks[4], (kk, din), dtype, fan_in=kk),
+        "conv_w_bc": dense_init(ks[5], (kk, 2 * g * ns), dtype, fan_in=kk),
+        "conv_b_x": jnp.zeros((din,), dtype),
+        "conv_b_bc": jnp.zeros((2 * g * ns,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((din,), dtype),
+        "wo": dense_init(ks[0], (din, d), dtype, fan_in=din),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over time. xbc: [B, L, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps, XLA fuses
+        out = out + pad[:, i : i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_chunked(
+    xh: jnp.ndarray,    # [b, l, h, p]
+    dt: jnp.ndarray,    # [b, l, h]  (post-softplus)
+    a: jnp.ndarray,     # [h]        (negative)
+    bm: jnp.ndarray,    # [b, l, h, n]  (already expanded over heads)
+    cm: jnp.ndarray,    # [b, l, h, n]
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # [b, h, p, n]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, l, h, p = xh.shape
+    n = bm.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        # zero-pad the tail; dt = 0 makes padded steps identity state
+        # updates (exp(0)=1 decay, zero input contribution)
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        xh, dt, bm, cm = zp(xh), zp(dt), zp(bm), zp(cm)
+        y, state = ssd_chunked(xh, dt, a, bm, cm, chunk, init_state)
+        return y[:, :l], state
+    c, q = l // chunk, chunk
+    f32 = jnp.float32
+    x_ = xh.reshape(b, c, q, h, p).astype(f32)
+    dt_ = dt.reshape(b, c, q, h).astype(f32)
+    b_ = bm.reshape(b, c, q, h, n).astype(f32)
+    c_ = cm.reshape(b, c, q, h, n).astype(f32)
+
+    da = dt_ * a.astype(f32)                      # [b,c,q,h]
+    da_cs = jnp.cumsum(da, axis=2)                # inclusive cumsum
+
+    # intra-chunk (quadratic, MXU): L[i,j] = exp(cs_i - cs_j) for i >= j
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # [b,c,i,j,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", c_, b_)
+    m = scores * decay * dt_[:, :, None, :, :]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", m, x_)
+
+    # chunk-final states: S_c = Σ_j exp(cs_Q - cs_j) dt_j B_j ⊗ x_j
+    decay_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)           # [b,c,q,h]
+    s_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", dt_ * decay_end, b_, x_)
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])                  # [b,c,h]
+
+    # inter-chunk recurrence
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), f32)
+
+    def step(state, inp):
+        s_chunk, cd = inp                         # [b,h,p,n], [b,h]
+        out_state = state * cd[:, :, None, None] + s_chunk
+        return out_state, state                   # emit state *entering* chunk
+
+    final_state, states_in = jax.lax.scan(
+        step,
+        init_state.astype(f32),
+        (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    states_in = jnp.moveaxis(states_in, 0, 1)     # [b,c,h,p,n]
+
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", c_, states_in,
+                       jnp.exp(da_cs))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(xh.dtype), final_state
+
+
+def ssd_sequential(xh, dt, a, bm, cm, init_state=None):
+    """Step-by-step oracle for tests."""
+    b, l, h, p = xh.shape
+    n = bm.shape[-1]
+    f32 = jnp.float32
+    state = (jnp.zeros((b, h, p, n), f32) if init_state is None
+             else init_state.astype(f32))
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp                 # [b,h,p], [b,h], [b,h,n] x2
+        da = jnp.exp(dt_t * a)[:, :, None, None]
+        state = state * da + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt_t, b_t, x_t)
+        y_t = jnp.einsum("bhn,bhpn->bhp", c_t, state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(xh.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(bm.astype(f32), 1, 0), jnp.moveaxis(cm.astype(f32), 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 layer
+# ---------------------------------------------------------------------------
+def mamba_forward(
+    params: Dict,
+    x: jnp.ndarray,                # [B, L, D]
+    cfg: LMConfig,
+    cache: Optional[Dict] = None,  # {"conv": [B,K-1,C], "state": [B,h,p,n]}
+    return_cache: bool = False,    # prefill: emit decode-ready cache
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    din, ns, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    g, hd, kk = cfg.ssm_groups, cfg.ssm_head_dim, cfg.ssm_conv
+    bsz, l, _ = x.shape
+    z = x @ params["wi_z"]
+    xin = x @ params["wi_x"]
+    bc = x @ params["wi_bc"]
+    dt = x @ params["wi_dt"]
+
+    new_cache = None
+    if cache is None:
+        conv_tail = jnp.concatenate([xin, bc], -1)[:, -(kk - 1):]
+        xin = _causal_conv(xin, params["conv_w_x"], params["conv_b_x"])
+        bc = _causal_conv(bc, params["conv_w_bc"], params["conv_b_bc"])
+        init_state = None
+    else:
+        # decode: single token, rolling conv window + recurrent state
+        assert l == 1
+        cur = jnp.concatenate([xin, bc], -1)
+        window = jnp.concatenate([cache["conv"], cur], axis=1)   # [B, K, C]
+        conv_w = jnp.concatenate(
+            [params["conv_w_x"], params["conv_w_bc"]], -1).astype(jnp.float32)
+        conv_b = jnp.concatenate(
+            [params["conv_b_x"], params["conv_b_bc"]], -1).astype(jnp.float32)
+        conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), conv_w)
+        conv_out = jax.nn.silu(conv_out + conv_b)[:, None, :].astype(x.dtype)
+        xin, bc = conv_out[..., :din], conv_out[..., din:]
+        new_conv = window[:, 1:]
+        init_state = cache["state"]
+
+    bmat = bc[..., : g * ns].reshape(bsz, l, g, ns)
+    cmat = bc[..., g * ns :].reshape(bsz, l, g, ns)
+    heads_per_group = nh // g
+    bmat = jnp.repeat(bmat, heads_per_group, axis=2)
+    cmat = jnp.repeat(cmat, heads_per_group, axis=2)
+
+    xh = xin.reshape(bsz, l, nh, hd)
+    xh = shard("ssm_heads", xh)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+
+    if cache is None:
+        y, final_state = ssd_chunked(xh, dt, a, bmat, cmat, cfg.ssm_chunk)
+    else:
+        y, final_state = ssd_sequential(xh, dt, a, bmat, cmat, init_state)
+        new_cache = {"conv": new_conv, "state": final_state}
+
+    y = y + (params["D_skip"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(bsz, l, din)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"], cfg.norm_eps)
+    out = y @ params["wo"]
+    if cache is None and return_cache:
+        new_cache = {"conv": conv_tail, "state": final_state}
+    return out, new_cache

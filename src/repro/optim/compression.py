@@ -1,0 +1,82 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantization with
+error feedback.
+
+At multi-pod scale the "pod" axis rides data-center interconnect (slower
+than intra-pod ICI), so the cross-pod gradient reduction is the long pole.
+``compressed_psum`` quantizes per-block to int8 before the cross-pod
+reduction (4x wire reduction vs f32, 2x vs bf16) inside shard_map;
+``ErrorFeedback`` accumulates the quantization residual into the next step
+(EF-SGD / 1-bit-Adam style), which restores convergence to near-exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                    dtype) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str,
+                    block: int = 256) -> jnp.ndarray:
+    """psum with int8 wire format (use inside shard_map over the pod axis).
+
+    Quantize -> psum(int32 accumulate) -> dequantize with psum'd scales.
+    Using a shared per-block scale (max over members via psum of scales)
+    keeps the reduction linear."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    local_scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    # members agree on a pmax-shared per-block scale (tiny f32 exchange);
+    # the int8 sum is then exactly linear — no cross-member scale bias
+    scale = jnp.maximum(jax.lax.pmax(local_scale, axis_name), 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    # int8 payload rides the wire; accumulate in int32
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    out = (acc.astype(jnp.float32) * scale).reshape(-1)
+    return out[: x.size].reshape(x.shape).astype(x.dtype)
+
+
+class ErrorFeedback:
+    """e_{t+1} = g_t + e_t - C(g_t + e_t); apply C's output, carry residual."""
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    @staticmethod
+    def compress(grads: Any, residual: Any, block: int = 256):
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            q, s = quantize_int8(target, block)
+            deq = dequantize_int8(q, s, g.shape, jnp.float32)
+            return deq.astype(g.dtype), target - deq
+        pairs = jax.tree.map(one, grads, residual)
+        comp = jax.tree.map(lambda p: p[0], pairs,
+                            is_leaf=lambda p: isinstance(p, tuple))
+        new_res = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda p: isinstance(p, tuple))
+        return comp, new_res

@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(1, warmup_steps)
+        frac = jnp.clip((step - warmup_steps) /
+                        max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = floor_frac * peak + (1 - floor_frac) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

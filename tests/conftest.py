@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+import jax
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Multi-device tests spawn subprocesses (test_distributed.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

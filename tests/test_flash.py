@@ -1,0 +1,88 @@
+"""Flash-attention kernel vs pure-jnp oracle: shape/dtype/feature sweep."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+
+RNG = np.random.default_rng(0)
+
+
+def ref_attention(q, k, v, causal=True, window=None, softcap=None,
+                  q_offset=0):
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask = k_pos[None] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def make(b, sq, sk, h, kv, hd, dtype=jnp.float32):
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, hd)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, sk, kv, hd)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, sk, kv, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,hd,qt,kt", [
+    (1, 32, 32, 2, 2, 8, 8, 8),
+    (2, 64, 64, 4, 2, 16, 16, 16),     # GQA g=2
+    (1, 16, 64, 8, 2, 8, 16, 32),      # g=4, long K
+    (2, 128, 128, 2, 1, 32, 128, 64),  # MQA
+])
+def test_flash_matches_ref_sweep(b, sq, sk, h, kv, hd, qt, kt):
+    q, k, v = make(b, sq, sk, h, kv, hd)
+    out = flash_attention(q, k, v, q_tile=qt, k_tile=kt, interpret=True,
+                          q_offset=sk - sq)
+    want = ref_attention(q, k, v, q_offset=sk - sq)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 16])
+def test_flash_sliding_window(window):
+    q, k, v = make(1, 64, 64, 2, 2, 8)
+    out = flash_attention(q, k, v, window=window, q_tile=16, k_tile=16,
+                          interpret=True)
+    want = ref_attention(q, k, v, window=window)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_softcap():
+    q, k, v = make(1, 32, 32, 2, 2, 8)
+    out = flash_attention(q, k, v, softcap=5.0, q_tile=8, k_tile=8,
+                          interpret=True)
+    want = ref_attention(q, k, v, softcap=5.0)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = make(1, 32, 32, 4, 4, 16, jnp.bfloat16)
+    out = flash_attention(q, k, v, q_tile=16, k_tile=16, interpret=True)
+    want = ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_decode_single_query():
+    """q_len=1 with offset = decode step semantics."""
+    q, k, v = make(2, 1, 64, 4, 2, 8)
+    out = flash_attention(q, k, v, q_offset=40, q_tile=1, k_tile=16,
+                          interpret=True)
+    want = ref_attention(q, k, v, q_offset=40)
+    np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5)

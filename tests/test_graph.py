@@ -1,0 +1,110 @@
+"""HeteroGraph preprocessing invariants (unit + hypothesis property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import HeteroGraph, synthetic_heterograph
+from repro.kernels import layout as L
+
+
+def make_graph(n_nodes=50, n_edges=300, n_nt=3, n_et=6, seed=0):
+    return synthetic_heterograph(n_nodes, n_edges, n_nt, n_et, seed=seed)
+
+
+def test_etype_sorted_and_ptr():
+    hg = make_graph()
+    assert np.all(np.diff(hg.etype) >= 0)
+    for r in range(hg.num_etypes):
+        seg = hg.etype[hg.etype_ptr[r]:hg.etype_ptr[r + 1]]
+        assert np.all(seg == r)
+
+
+def test_dst_csr_consistent():
+    hg = make_graph()
+    dst_sorted = hg.dst[hg.perm_dst]
+    assert np.all(np.diff(dst_sorted) >= 0)
+    assert np.array_equal(dst_sorted, hg.dst_sorted)
+    deg = np.diff(hg.dst_ptr)
+    assert deg.sum() == hg.num_edges
+    assert np.array_equal(np.bincount(hg.dst, minlength=hg.num_nodes), deg)
+
+
+def test_compaction_map_roundtrip():
+    hg = make_graph()
+    # every edge's (src, etype) equals its unique row's (src, etype)
+    assert np.array_equal(hg.unique_src[hg.edge_to_unique], hg.src)
+    assert np.array_equal(hg.unique_etype[hg.edge_to_unique], hg.etype)
+    # unique table is etype-sorted and deduplicated
+    assert np.all(np.diff(hg.unique_etype) >= 0)
+    key = hg.unique_etype.astype(np.int64) * hg.num_nodes + hg.unique_src
+    assert len(np.unique(key)) == len(key)
+    assert 0 < hg.entity_compaction_ratio <= 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_nodes=st.integers(2, 40),
+    n_edges=st.integers(1, 200),
+    n_et=st.integers(1, 12),
+    seed=st.integers(0, 5),
+)
+def test_property_graph_invariants(n_nodes, n_edges, n_et, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    et = rng.integers(0, n_et, n_edges)
+    hg = HeteroGraph.from_edges(src, dst, et, num_nodes=n_nodes,
+                                num_etypes=n_et)
+    assert hg.num_edges == n_edges
+    assert hg.etype_ptr[-1] == n_edges
+    assert hg.num_unique <= n_edges
+    assert np.array_equal(hg.unique_src[hg.edge_to_unique], hg.src)
+    # dst CSR covers all edges exactly once
+    assert sorted(hg.perm_dst.tolist()) == list(range(n_edges))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    sizes=st.lists(st.integers(0, 37), min_size=1, max_size=9),
+    tile=st.sampled_from([4, 8, 16]),
+)
+def test_property_padded_segments(sizes, tile):
+    sizes = np.array(sizes)
+    ptr = np.zeros(len(sizes) + 1, np.int64)
+    np.cumsum(sizes, out=ptr[1:])
+    ps = L.pad_segments(ptr, tile)
+    assert ps.padded_rows % tile == 0
+    # row_map covers all original rows exactly once
+    valid = ps.row_map[ps.row_map >= 0]
+    assert sorted(valid.tolist()) == list(range(int(sizes.sum())))
+    # inv_map inverts row_map
+    for orig, pos in enumerate(ps.inv_map):
+        assert ps.row_map[pos] == orig
+    # every tile belongs to exactly one group; group ordering non-decreasing
+    assert np.all(np.diff(ps.tile_to_group) >= 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    degs=st.lists(st.integers(0, 9), min_size=1, max_size=40),
+    tile=st.sampled_from([4, 8]),
+    nb=st.sampled_from([4, 8]),
+)
+def test_property_blocked_csr(degs, tile, nb):
+    degs = np.array(degs)
+    ptr = np.zeros(len(degs) + 1, np.int64)
+    np.cumsum(degs, out=ptr[1:])
+    bc = L.block_csr(ptr, edge_tile=tile, node_block=nb)
+    assert bc.padded_edges % tile == 0
+    valid = bc.edge_map[bc.edge_map >= 0]
+    assert sorted(valid.tolist()) == list(range(int(degs.sum())))
+    # no edge tile spans two node blocks
+    t2b = bc.tile_to_block
+    assert np.all(np.diff(t2b) >= 0)
+    for t in range(bc.num_tiles):
+        ld = bc.local_dst[t * tile:(t + 1) * tile]
+        em = bc.edge_map[t * tile:(t + 1) * tile]
+        mask = em >= 0
+        if mask.any():
+            # all valid edges in a tile map into block t2b[t]
+            assert np.all(ld[mask] < nb)

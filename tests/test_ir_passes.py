@@ -1,0 +1,92 @@
+"""Compiler-pass unit tests: reordering, compaction, lowering structure."""
+import pytest
+
+from repro.core.ir import inter_op as I
+from repro.core.ir import intra_op as O
+from repro.core.ir.passes import (
+    apply_compact_materialization, lower_program, reorder_linear_ops,
+)
+from repro.models import hgt_program, rgat_program, rgcn_program
+
+
+def test_reorder_creates_weight_products():
+    prog = rgat_program(8, 8)
+    new, wprods = reorder_linear_ops(prog)
+    # both attention dots reorder into weight-weight products
+    assert len(wprods) == 2
+    names = {w.out for w in wprods}
+    # the rewritten statements now use the composed typed linear
+    rewritten = [s for s in new.stmts
+                 if isinstance(s, I.EdgeCompute)
+                 and isinstance(s.expr, I.TypedLinear)
+                 and s.expr.weight.name in names]
+    assert len(rewritten) == 2
+    # composed weight has output dim 1 (a typed GEMV)
+    assert all(s.expr.weight.shape[-1] == 1 for s in rewritten)
+
+
+def test_compaction_marks_src_etype_only():
+    prog = rgat_program(8, 8)
+    marked = apply_compact_materialization(prog)
+    assert marked.layout_of("hs") == I.Layout.COMPACT
+    # attt depends on dst: must stay vanilla
+    assert marked.layout_of("attt") == I.Layout.VANILLA
+    assert marked.layout_of("att_raw") == I.Layout.VANILLA
+
+
+def test_compaction_hgt_messages():
+    prog = hgt_program(8, 8)
+    marked = apply_compact_materialization(prog)
+    # the paper's msg_HGT example (Fig. 7): katt and msg are compactable
+    assert marked.layout_of("katt") == I.Layout.COMPACT
+    assert marked.layout_of("msg") == I.Layout.COMPACT
+
+
+@pytest.mark.parametrize("prog_fn,max_fallback", [
+    (rgcn_program, 0), (rgat_program, 0), (hgt_program, 0),
+])
+def test_lowering_never_falls_back(prog_fn, max_fallback):
+    """§3.2.5: all three paper models lower fully onto the two templates."""
+    for reorder in (False, True):
+        for compact in (False, True):
+            plan = lower_program(prog_fn(16, 16), reorder=reorder,
+                                 compact=compact)
+            assert plan.fallback_count() <= max_fallback, plan.describe()
+            assert plan.gemm_count() >= 1
+            assert plan.traversal_count() >= 1
+
+
+def test_lowering_preference_gemm_first():
+    plan = lower_program(rgat_program(16, 16), reorder=True, compact=True)
+    kinds = [type(op).__name__ for op in plan.ops]
+    # weight products hoisted to the front, GEMMs before the traversal tail
+    assert kinds[0] == "WeightProductSpec"
+    gemm_idx = [i for i, k in enumerate(kinds) if k == "GemmSpec"]
+    trav_idx = [i for i, k in enumerate(kinds) if k == "TraversalSpec"]
+    assert min(gemm_idx) < min(trav_idx)
+
+
+def test_reordered_rgat_gemm_count():
+    """Reordering moves the per-edge [d x d] GEMsM to per-relation BMM:
+    edgewise GEMMs shrink to out_cols=1 instances."""
+    plan = lower_program(rgat_program(16, 16), reorder=True, compact=True)
+    gemv = [op for op in plan.ops
+            if isinstance(op, O.GemmSpec) and op.out_cols == 1]
+    assert len(gemv) == 2  # atts + attt
+
+
+def test_compact_gemm_uses_unique_gather():
+    plan = lower_program(hgt_program(16, 16), reorder=False, compact=True)
+    compact_gemms = [op for op in plan.ops if isinstance(op, O.GemmSpec)
+                     and op.gather == O.GatherScheme.BY_UNIQUE_SRC]
+    assert len(compact_gemms) == 2  # katt, msg over unique (src, etype) rows
+    assert all(op.seg_ptr == "unique_etype_ptr" for op in compact_gemms)
+
+
+def test_traversal_fusion_single_region():
+    """EdgeSoftmax + NodeAggregate fuse into ONE traversal instance."""
+    plan = lower_program(rgat_program(16, 16), reorder=True, compact=True)
+    assert plan.traversal_count() == 1
+    trav = [op for op in plan.ops if isinstance(op, O.TraversalSpec)][0]
+    kinds = [s.kind for s in trav.stmts]
+    assert "segment_max" in kinds and "segment_sum" in kinds

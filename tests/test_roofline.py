@@ -1,0 +1,107 @@
+"""Roofline HLO analyzer: loop-multiplier correctness, collective tallies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (
+    HW_V5E, analyze_hlo, parse_hlo, roofline_terms, _shape_bytes,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]{1,0}") == 128
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 24
+    assert _shape_bytes("pred[]") == 1
+
+
+def _flops_of(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(txt)["flops"]
+
+
+def test_scan_trip_count_multiplier():
+    """HLO flops must scale with scan length (cost_analysis does NOT)."""
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+
+    def f(steps):
+        def g(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+        return g, jax.ShapeDtypeStruct((steps, 128, 128), jnp.float32)
+
+    g4, w4 = f(4)
+    g8, w8 = f(8)
+    f4 = _flops_of(g4, x, w4)
+    f8 = _flops_of(g8, x, w8)
+    analytic4 = 4 * 2 * 64 * 128 * 128
+    assert abs(f4 - analytic4) / analytic4 < 0.05, (f4, analytic4)
+    assert abs(f8 - 2 * f4) / f8 < 0.05
+
+
+def test_nested_scan_multipliers():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((3, 32, 32), jnp.float32)
+
+    def g(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c, _ = jax.lax.scan(inner, c, None, length=5)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y
+
+    flops = _flops_of(g, x, w)
+    analytic = 3 * 5 * 2 * 32 * 32 * 32
+    assert abs(flops - analytic) / analytic < 0.05, (flops, analytic)
+
+
+def test_dominant_term_selection():
+    terms = roofline_terms(
+        {}, {"flops": 1e12, "mem_bytes_proxy": 1e9,
+             "collective_bytes": 1e12}, 256, HW_V5E)
+    assert terms["dominant"] == "collective"
+    assert terms["t_collective_s"] == pytest.approx(1e12 / 50e9)
+    terms2 = roofline_terms(
+        {}, {"flops": 1e15, "mem_bytes_proxy": 1e9, "collective_bytes": 0},
+        256, HW_V5E)
+    assert terms2["dominant"] == "compute"
+
+
+def test_parse_synthetic_hlo_with_tuple_types():
+    txt = """HloModule test, num_partitions=4
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[8,8]{1,0} all-gather(%d), channel_id=1, replica_groups=[1,4]<=[4], dimensions={1}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ag)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %x)
+  %wh = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+    res = analyze_hlo(txt)
+    assert res["flops"] == 7 * 2 * 8 * 8 * 8          # trip count 7
+    assert res["coll_all-gather"] == 7 * 8 * 8 * 4    # per-iteration AG

@@ -1,0 +1,194 @@
+"""Optimizer, checkpointing, data pipeline, compression, fault-tolerance."""
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import PrefetchIterator, SyntheticLMStream
+from repro.lm.config import ShapeCell
+from repro.optim import AdamW, TrainState, cosine_schedule
+from repro.optim.compression import (
+    ErrorFeedback, dequantize_int8, quantize_int8,
+)
+from repro.runtime.fault import (
+    ElasticController, HeartbeatMonitor, StragglerPolicy,
+)
+from repro.launch.mesh import plan_elastic_mesh
+
+
+# --------------------------------------------------------------- optimizer
+def test_adamw_optimizes_quadratic():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(state):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(state.params)
+        return opt.update(g, state)
+
+    for _ in range(120):
+        state = step(state)
+    assert float(jnp.max(jnp.abs(state.params["w"]))) < 0.15
+
+
+def test_adamw_clips_global_norm():
+    opt = AdamW(learning_rate=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    new = opt.update(g, state)
+    # lr=0: params unchanged; moments reflect clipped gradient
+    assert float(jnp.max(new.mu["w"])) <= 0.11
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr(jnp.int32(100))) < 2e-4
+    assert float(lr(jnp.int32(100))) >= 1e-4 - 1e-9   # floor
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2, 3], jnp.int32)}}
+    ck.save(5, tree, blocking=True)
+    out = ck.restore(tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"w": jnp.zeros(4)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, jax.tree.map(lambda x: x + s, tree))
+    ck.wait()
+    assert ck.steps() == [3, 4]
+    out = ck.restore(tree)          # latest
+    np.testing.assert_allclose(out["w"], np.full(4, 4.0))
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, {"w": jnp.ones(2)}, blocking=True)
+    names = [p.name for p in tmp_path.iterdir()]
+    assert "step_00000007" in names
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+# --------------------------------------------------------------- data
+def test_stream_deterministic_per_step():
+    cfg = __import__("repro.configs", fromlist=["x"]).get_reduced("qwen3-4b")
+    cell = ShapeCell("t", 16, 4, "train")
+    s1 = SyntheticLMStream(cfg, cell, seed=3)
+    s2 = SyntheticLMStream(cfg, cell, seed=3)
+    b1, b2 = s1.batch(11), s2.batch(11)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch(12)["tokens"], b1["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+
+
+def test_prefetch_iterator_order_and_restart():
+    cfg = __import__("repro.configs", fromlist=["x"]).get_reduced("qwen3-4b")
+    cell = ShapeCell("t", 8, 2, "train")
+    stream = SyntheticLMStream(cfg, cell)
+    it = PrefetchIterator(stream, start_step=5)
+    steps = [next(it)[0] for _ in range(4)]
+    it.close()
+    assert steps == [5, 6, 7, 8]
+
+
+# --------------------------------------------------------------- compression
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    q, s = quantize_int8(x)
+    x2 = dequantize_int8(q, s, x.shape, x.dtype)
+    # blockwise int8: error bounded by scale/2 per element
+    max_err = float(jnp.max(jnp.abs(x - x2)))
+    assert max_err <= float(jnp.max(s)) * 0.51
+
+
+def test_error_feedback_removes_bias():
+    """Accumulated EF-compressed gradients converge to the true sum."""
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(256,)) * 1e-3, jnp.float32)}
+    res = ErrorFeedback.init(g)
+    acc = jnp.zeros(256)
+    n = 50
+    for _ in range(n):
+        comp, res = ErrorFeedback.compress(g, res)
+        acc = acc + comp["w"]
+    true = g["w"] * n
+    # without EF the quantization bias would accumulate linearly
+    np.testing.assert_allclose(acc, true, atol=2e-3)
+
+
+def test_compressed_psum_single_member():
+    from functools import partial
+    from repro.optim.compression import compressed_psum
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax import shard_map
+    mesh = jax.make_mesh((1,), ("pod",))
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(64,)), jnp.float32)
+    f = shard_map(partial(compressed_psum, axis_name="pod"), mesh=mesh,
+                  in_specs=P(), out_specs=P())
+    y = f(x)
+    np.testing.assert_allclose(y, x, atol=np.max(np.abs(x)) / 100)
+
+
+# --------------------------------------------------------------- fault
+def test_heartbeat_death_detection():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1"], timeout=10, clock=lambda: t[0])
+    t[0] = 5.0
+    mon.heartbeat("h0")
+    t[0] = 12.0
+    assert mon.dead_hosts() == ["h1"]
+    assert mon.alive_hosts() == ["h0"]
+
+
+def test_straggler_policy_escalation():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1", "h2", "h3"], clock=lambda: t[0])
+    pol = StragglerPolicy(trigger_factor=1.5, persist_steps=3)
+    for step in range(6):
+        for h in mon.hosts:
+            mon.heartbeat(h, step, step_time=2.0 if h == "h3" else 1.0)
+        actions = pol.decide(mon, spares=0)
+    assert actions.get("h3") == "evict"
+    actions = pol.decide(mon, spares=1)
+    assert actions.get("h3") == "hot_swap"
+
+
+def test_elastic_plan_preserves_tp():
+    plan = plan_elastic_mesh(512 - 16, model_parallel=16)
+    assert plan.shape[-1] == 16
+    assert plan.used_devices == 496
+    assert plan.dropped_devices == 0
+    plan2 = plan_elastic_mesh(509, model_parallel=16)
+    assert plan2.used_devices == 496 and plan2.dropped_devices == 13
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(15, model_parallel=16)
+
+
+def test_elastic_controller_event_flow():
+    t = [0.0]
+    mon = HeartbeatMonitor(["h0", "h1"], timeout=5, clock=lambda: t[0])
+    ctl = ElasticController(mon, devices_per_host=256, model_parallel=16)
+    assert ctl.check(step=3) is None
+    t[0] = 10.0
+    mon.heartbeat("h0")
+    t[0] = 12.0          # h0 heartbeat 2s ago (alive), h1 12s ago (dead)
+    ev = ctl.check(step=7)
+    assert ev is not None and ev.dead_hosts == ["h1"]
+    plan = ctl.replan(ev)
+    assert plan.used_devices == 256 and plan.shape[-1] == 16

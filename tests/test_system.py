@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests: the train and serve drivers run on CPU with
+checkpoint/restart and failure simulation (deliverable b wiring)."""
+import numpy as np
+import pytest
+
+
+def test_train_driver_end_to_end(tmp_path):
+    from repro.launch.train import main
+    losses = main([
+        "--arch", "qwen3-4b", "--reduced", "--steps", "10",
+        "--batch", "4", "--seq", "32",
+        "--ckpt-dir", str(tmp_path / "ck"),
+        "--ckpt-every", "4",
+    ])
+    assert len(losses) == 10
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_train_driver_failure_recovery(tmp_path):
+    from repro.launch.train import main
+    losses = main([
+        "--arch", "qwen3-4b", "--reduced", "--steps", "10",
+        "--batch", "4", "--seq", "32",
+        "--ckpt-dir", str(tmp_path / "ck"),
+        "--ckpt-every", "3",
+        "--simulate-failure", "6",
+    ])
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_train_driver_resume(tmp_path):
+    from repro.launch.train import main
+    main(["--arch", "gemma2-2b", "--reduced", "--steps", "6",
+          "--batch", "2", "--seq", "16",
+          "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "3"])
+    losses = main(["--arch", "gemma2-2b", "--reduced", "--steps", "9",
+                   "--batch", "2", "--seq", "16",
+                   "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "3",
+                   "--resume"])
+    assert len(losses) == 3     # resumed from step 6
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-780m"])
+def test_serve_driver_generates(arch):
+    from repro.launch.serve import main
+    gen = main(["--arch", arch, "--reduced", "--batch", "2",
+                "--prompt-len", "8", "--gen", "6"])
+    assert gen.shape == (2, 6)
+    assert gen.dtype == np.int32
+
+
+def test_loc_report_paper_parity():
+    """§4.1: the three models are ~51 LoC of IR; generated-plan ops are
+    the 'emitted code'. Verify model definitions stay compact."""
+    import inspect
+    from repro.models import hgt, rgat, rgcn
+    total = 0
+    for mod in (rgcn, rgat, hgt):
+        src = inspect.getsource(mod)
+        body = [l for l in src.splitlines()
+                if l.strip() and not l.strip().startswith(("#", '"""', "'''"))]
+        total += len(body)
+    assert total < 120, total   # 3 models, IR-level definitions stay small
