@@ -7,20 +7,12 @@ from typing import Callable, Dict
 import jax
 import numpy as np
 
-from repro.core.graph import HeteroGraph, table3_graph
+from repro.core.graph import CPU_REDUCED_SCALES, HeteroGraph, table3_graph
 
 # CPU-tractable scale factors for the Table 3 datasets (names preserved;
-# statistics proportional — see DESIGN.md §8.2)
-BENCH_SCALES: Dict[str, float] = {
-    "aifb": 0.5,
-    "mutag": 0.2,
-    "bgs": 0.03,
-    "fb15k": 0.03,
-    "biokg": 0.005,
-    "am": 0.004,
-    "mag": 0.001,
-    "wikikg2": 0.001,
-}
+# statistics proportional — see DESIGN.md §8.2). Shared with the serving
+# driver's --reduced mode so benchmarks and serving see the same graphs.
+BENCH_SCALES: Dict[str, float] = dict(CPU_REDUCED_SCALES)
 
 DEFAULT_DATASETS = ["aifb", "mutag", "fb15k", "bgs"]
 

@@ -9,6 +9,7 @@ fig9   — op-category breakdown (Fig. 3 / Fig. 9)
 fig10  — memory footprint & compaction ratio (Fig. 10)
 fig11  — hidden-dim sweep (Fig. 11)
 loc    — LoC report (§4.1)
+serve  — sampled mini-batch serving vs full-graph inference
 """
 import argparse
 import sys
@@ -17,12 +18,13 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig8,table5,fig9,fig10,fig11,loc")
+                    help="comma list: fig8,table5,fig9,fig10,fig11,loc,serve")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig8_speedup, fig9_breakdown, fig10_memory,
-                            fig11_dims, loc_report, table5_opts)
+                            fig11_dims, loc_report, serve_sampled,
+                            table5_opts)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -32,6 +34,7 @@ def main() -> None:
         ("table5", table5_opts.run),
         ("fig9", fig9_breakdown.run),
         ("fig8", fig8_speedup.run),
+        ("serve", serve_sampled.run),
     ]
     for name, fn in jobs:
         if only and name not in only:

@@ -1,0 +1,70 @@
+"""Sampled mini-batch serving vs full-graph inference.
+
+Not a paper figure — this captures the serving trajectory the ROADMAP asks
+for: per-request latency of fanout-sampled mini-batch inference (the
+production shape) against a full-graph forward (the paper's artifact shape),
+on scaled Table-3 graphs. Sampled timings are steady-state (bucketed shapes,
+measured after warmup batches).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, csv_row, time_fn
+from repro.core.module import HectorStack
+from repro.models import rgat_program
+from repro.sampling import FanoutSampler, MiniBatchLoader, SeedStream
+
+DATASETS = ["aifb", "mutag"]
+
+
+def _sampled_latency(stack, params, feats, graph, fanouts, batch_size,
+                     warmup=6, iters=8, tile=32, node_block=32):
+    sampler = FanoutSampler(graph, fanouts, seed=0)
+    loader = MiniBatchLoader(
+        sampler, SeedStream(graph.num_nodes, batch_size, seed=0),
+        tile=tile, node_block=node_block, bucket=True,
+        num_batches=warmup + iters,
+    )
+    times = []
+    try:
+        for i, mb in enumerate(loader):
+            t0 = time.perf_counter()
+            out = stack.apply_blocks(params, mb, feats)
+            out.block_until_ready()
+            if i >= warmup:
+                times.append(time.perf_counter() - t0)
+    finally:
+        loader.close()
+    return float(np.median(times))
+
+
+def run(datasets=None, d=64, batch_size=64, out=print):
+    datasets = datasets or DATASETS
+    for ds in datasets:
+        hg = bench_graph(ds)
+        rng = np.random.default_rng(0)
+        feats = jnp.asarray(rng.normal(size=(hg.num_nodes, d)), jnp.float32)
+        stack = HectorStack([rgat_program(d, d), rgat_program(d, 16)], hg,
+                            tile=32, node_block=32, jit=False)
+        params = stack.init(jax.random.key(0))
+
+        t_full = time_fn(lambda: stack.apply(params, {"feature": feats}))
+        out(csv_row(f"serve/{ds}/full_graph", t_full,
+                    f"nodes={hg.num_nodes}"))
+
+        for fanout in (5, 10):
+            t_s = _sampled_latency(stack, params, feats, hg,
+                                   [fanout, fanout], batch_size)
+            out(csv_row(
+                f"serve/{ds}/sampled_f{fanout}_b{batch_size}", t_s,
+                f"seeds_per_s={batch_size / max(t_s, 1e-9):.0f}"))
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

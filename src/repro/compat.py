@@ -1,0 +1,29 @@
+"""Version-compat shims for the installed jax.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+namespace around jax 0.4.34, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma``. Model code imports ``shard_map`` from here
+and always passes ``check_vma=...``; the wrapper renames the kwarg when the
+installed jax still uses the old spelling.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.4.34 exports shard_map at top level
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # older jaxlib: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map_impl).parameters
+    else "check_rep"
+)
+
+
+def shard_map(f, **kw):
+    """shard_map with the check kwarg renamed for the installed jax."""
+    if "check_vma" in kw and _CHECK_KW != "check_vma":
+        kw[_CHECK_KW] = kw.pop("check_vma")
+    return _shard_map_impl(f, **kw)

@@ -41,16 +41,32 @@ class KernelLayouts:
 
 
 def build_kernel_layouts(
-    hg: HeteroGraph, tile: int = 128, node_block: int = 128
+    hg: HeteroGraph, tile: int = 128, node_block: int = 128,
+    bucket: bool = False,
 ) -> KernelLayouts:
+    """Build the per-graph layouts; with ``bucket=True`` every layout is
+    grown to power-of-two row/edge-slot counts (pure padding), so repeated
+    compilation caches hit across sampled blocks of different sizes."""
+    edge_ps = L.pad_segments(hg.etype_ptr, tile)
+    unique_ps = L.pad_segments(hg.unique_etype_ptr, tile)
+    node_ps = L.pad_segments(hg.ntype_ptr, tile)
+    bc = L.block_csr(hg.dst_ptr, edge_tile=tile, node_block=node_block)
+    if bucket:
+        if tile & (tile - 1):
+            raise ValueError("bucketed layouts need a power-of-two tile")
+
+        def bucket_rows(rows: int) -> int:
+            return max(tile, L.pow2ceil(rows))
+        edge_ps = L.pad_segments_rows(edge_ps, bucket_rows(edge_ps.padded_rows))
+        unique_ps = L.pad_segments_rows(
+            unique_ps, bucket_rows(unique_ps.padded_rows))
+        node_ps = L.pad_segments_rows(node_ps, bucket_rows(node_ps.padded_rows))
+        bc = L.pad_blocked_csr(bc, bucket_rows(bc.padded_edges))
     return KernelLayouts(
-        edge_seg=K.padded_segments_dev(L.pad_segments(hg.etype_ptr, tile)),
-        unique_seg=K.padded_segments_dev(L.pad_segments(hg.unique_etype_ptr, tile)),
-        node_seg=K.padded_segments_dev(L.pad_segments(hg.ntype_ptr, tile)),
-        blocked=K.blocked_csr_dev(
-            L.block_csr(hg.dst_ptr, edge_tile=tile, node_block=node_block),
-            hg.perm_dst,
-        ),
+        edge_seg=K.padded_segments_dev(edge_ps),
+        unique_seg=K.padded_segments_dev(unique_ps),
+        node_seg=K.padded_segments_dev(node_ps),
+        blocked=K.blocked_csr_dev(bc, hg.perm_dst),
     )
 
 
@@ -182,6 +198,53 @@ def execute_plan(
                 f"lowering for it"
             )
     return {name: env.get(name) for name in plan.outputs}
+
+
+# ---------------------------------------------------------------------------
+# block-sequence execution (sampled mini-batch path)
+# ---------------------------------------------------------------------------
+_ACTIVATIONS = {
+    "relu": lambda x: jnp.maximum(x, 0),
+    "gelu": jax.nn.gelu,
+    "tanh": jnp.tanh,
+    "none": lambda x: x,
+    None: lambda x: x,
+}
+
+
+def execute_block_sequence(
+    plans,                  # List[O.Plan], one lowered layer per hop
+    params,                 # List[Dict[str, jnp.ndarray]] per layer
+    gts,                    # List[GraphTensors] per block
+    kls,                    # List[KernelLayouts] per block
+    dst_locals,             # List[jnp.ndarray]: out-frontier rows per block
+    seed_perm: jnp.ndarray,  # final-frontier row of each requested seed
+    feats: Dict[str, jnp.ndarray],  # features for the first block's node set
+    backend: str = "xla",
+    activation: str = "relu",
+) -> jnp.ndarray:
+    """Run one lowered layer per sampled hop, narrowing to each hop's output
+    frontier, and gather the requested seed rows from the last hop.
+
+    The mini-batch analogue of ``execute_plan``: every hop executes the same
+    generated code over its block's own ``GraphTensors``/``KernelLayouts``
+    (which are just smaller instances of the full-graph products), and the
+    host-precomputed ``dst_locals`` maps align hop l's outputs with hop
+    l+1's node set.
+    """
+    if not (len(plans) == len(params) == len(gts) == len(kls)
+            == len(dst_locals)):
+        raise ValueError("plans/params/blocks length mismatch")
+    act = _ACTIVATIONS[activation]
+    cur = dict(feats)
+    h = None
+    last = len(plans) - 1
+    for i, (plan, p, gt, kl) in enumerate(zip(plans, params, gts, kls)):
+        out = execute_plan(plan, p, gt, cur, kl, backend)
+        h = out[plan.outputs[0]][dst_locals[i]]
+        if i < last:
+            cur = {"feature": act(h)}
+    return h[seed_perm]
 
 
 def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,

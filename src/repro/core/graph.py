@@ -281,6 +281,14 @@ TABLE3_COMPACTION = {
 }
 
 
+# CPU-tractable scale factors (statistics proportional) shared by the
+# benchmarks and the --reduced serving mode, so both run the same graphs.
+CPU_REDUCED_SCALES = {
+    "aifb": 0.5, "mutag": 0.2, "bgs": 0.03, "fb15k": 0.03,
+    "biokg": 0.005, "am": 0.004, "mag": 0.001, "wikikg2": 0.001,
+}
+
+
 def table3_graph(name: str, scale: float = 1.0, seed: int = 0) -> HeteroGraph:
     n, nt, e, et = TABLE3_DATASETS[name]
     return synthetic_heterograph(

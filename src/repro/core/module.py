@@ -10,7 +10,7 @@ Usage (the 51-lines-of-model-code experience of §4.1):
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,14 +33,18 @@ class HectorModule:
         tile: int = 128,
         node_block: int = 128,
         jit: bool = True,
+        gt=None,
+        layouts: Optional[codegen.KernelLayouts] = None,
     ):
         self.program = program
         self.graph = graph
         self.plan = lower_program(program, reorder=reorder, compact=compact)
-        self.gt = graph.to_tensors()
-        self.layouts = codegen.build_kernel_layouts(
-            graph, tile=tile, node_block=node_block
-        )
+        # gt/layouts may be shared across modules over the same graph
+        # (HectorStack builds them once for all layers)
+        self.gt = graph.to_tensors() if gt is None else gt
+        self.layouts = layouts if layouts is not None else \
+            codegen.build_kernel_layouts(graph, tile=tile,
+                                         node_block=node_block)
         self.backend = backend
         self._apply = functools.partial(
             codegen.execute_plan,
@@ -76,3 +80,89 @@ class HectorModule:
     @property
     def entity_compaction_ratio(self) -> float:
         return self.graph.entity_compaction_ratio
+
+
+class HectorStack:
+    """A multi-layer RGNN: one Hector program per layer, with an elementwise
+    activation between layers.
+
+    Two execution paths share the same lowered plans and parameters:
+
+    * ``apply(params, feats)``        — full-graph forward (all nodes);
+    * ``apply_blocks(params, mb, x)`` — sampled mini-batch forward over a
+      prefetched ``repro.sampling.MiniBatch``: one layer per hop, each over
+      its block's own graph tensors/kernel layouts, returning the rows for
+      the requested seeds (in request order, duplicates included).
+
+    With full-neighborhood fanout the two paths agree within fp32 tolerance
+    on the seed rows — the invariant the sampling tests pin down.
+    """
+
+    def __init__(
+        self,
+        programs: Sequence[I.Program],
+        graph: HeteroGraph,
+        *,
+        reorder: bool = True,
+        compact: bool = True,
+        backend: str = "xla",
+        tile: int = 128,
+        node_block: int = 128,
+        activation: str = "relu",
+        jit: bool = True,
+    ):
+        if not programs:
+            raise ValueError("need at least one layer program")
+        # full-graph tensors/layouts are identical across layers: build once
+        gt = graph.to_tensors()
+        layouts = codegen.build_kernel_layouts(graph, tile=tile,
+                                               node_block=node_block)
+        self.layers = [
+            HectorModule(p, graph, reorder=reorder, compact=compact,
+                         backend=backend, tile=tile, node_block=node_block,
+                         jit=jit, gt=gt, layouts=layouts)
+            for p in programs
+        ]
+        self.activation = activation
+        self.backend = backend
+        self._act = codegen._ACTIVATIONS[activation]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def plans(self):
+        return [l.plan for l in self.layers]
+
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array, dtype=jnp.float32) -> List[Dict[str, jnp.ndarray]]:
+        keys = jax.random.split(key, self.num_layers)
+        return [l.init(k, dtype) for l, k in zip(self.layers, keys)]
+
+    def apply(self, params: Sequence[Dict[str, jnp.ndarray]],
+              feats: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Full-graph forward; returns the last layer's primary output."""
+        cur = dict(feats)
+        h = None
+        for i, (layer, p) in enumerate(zip(self.layers, params)):
+            out = layer.apply(p, cur)
+            h = out[layer.plan.outputs[0]]
+            if i < self.num_layers - 1:
+                cur = {"feature": self._act(h)}
+        return h
+
+    def apply_blocks(self, params: Sequence[Dict[str, jnp.ndarray]],
+                     mb, global_feats: jnp.ndarray) -> jnp.ndarray:
+        """Sampled forward over a ``MiniBatch``; returns [len(seeds), out]."""
+        if mb.num_hops != self.num_layers:
+            raise ValueError(
+                f"minibatch has {mb.num_hops} hops but the stack has "
+                f"{self.num_layers} layers"
+            )
+        feats = {"feature": global_feats[mb.input_ids]}
+        return codegen.execute_block_sequence(
+            self.plans, list(params), mb.tensors, mb.layouts, mb.dst_locals,
+            mb.seed_perm, feats, backend=self.backend,
+            activation=self.activation,
+        )

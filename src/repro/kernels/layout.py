@@ -73,6 +73,69 @@ def pad_segments(seg_ptr: np.ndarray, tile: int) -> PaddedSegments:
     )
 
 
+def pow2ceil(x: int) -> int:
+    """Smallest power of two >= max(1, x)."""
+    return 1 << (max(1, int(x)) - 1).bit_length()
+
+
+def pad_segments_rows(ps: PaddedSegments, target_rows: int) -> PaddedSegments:
+    """Grow a ``PaddedSegments`` layout to ``target_rows`` padded rows.
+
+    Extra rows are pure padding (``row_map`` = -1) and extra tiles extend
+    the **last** group's run — the tile->group map must stay non-decreasing
+    because the accumulating kernels detect a group's first tile via
+    ``t != prev``. Pad tiles multiply zero rows and are never read back
+    through ``inv_map``. Used by the serving path to bucket layout shapes so
+    jit/eager compilation caches hit across mini-batches.
+    """
+    if target_rows % ps.tile:
+        raise ValueError(f"target_rows {target_rows} not a multiple of tile")
+    extra = target_rows - ps.padded_rows
+    if extra < 0:
+        raise ValueError("target smaller than current layout")
+    if extra == 0:
+        return ps
+    return dataclasses.replace(
+        ps,
+        padded_rows=target_rows,
+        row_map=np.concatenate(
+            [ps.row_map, np.full(extra, -1, dtype=np.int32)]),
+        tile_to_group=np.concatenate(
+            [ps.tile_to_group[: ps.padded_rows // ps.tile],
+             np.full(extra // ps.tile, ps.num_groups - 1, dtype=np.int32)]),
+    )
+
+
+def pad_blocked_csr(bc: BlockedCSR, target_edges: int) -> BlockedCSR:
+    """Grow a ``BlockedCSR`` to ``target_edges`` padded edge slots.
+
+    Extra tiles carry no edges (``edge_map`` = -1, ``local_dst`` points past
+    the block) and extend the **last** node block's run, keeping the
+    tile->block map non-decreasing (the aggregation kernels re-initialize an
+    output block whenever the map changes value); they accumulate exact
+    zeros there.
+    """
+    if target_edges % bc.edge_tile:
+        raise ValueError("target_edges not a multiple of edge_tile")
+    extra = target_edges - bc.padded_edges
+    if extra < 0:
+        raise ValueError("target smaller than current layout")
+    if extra == 0:
+        return bc
+    return dataclasses.replace(
+        bc,
+        padded_edges=target_edges,
+        edge_map=np.concatenate(
+            [bc.edge_map, np.full(extra, -1, dtype=np.int32)]),
+        local_dst=np.concatenate(
+            [bc.local_dst, np.full(extra, bc.node_block, dtype=np.int32)]),
+        tile_to_block=np.concatenate(
+            [bc.tile_to_block[: bc.padded_edges // bc.edge_tile],
+             np.full(extra // bc.edge_tile, bc.num_node_blocks - 1,
+                     dtype=np.int32)]),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockedCSR:
     """Tile-aligned padded layout for destination-sorted edges.

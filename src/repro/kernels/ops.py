@@ -156,6 +156,9 @@ def segment_mm(
     tile_n: int = 128,
 ) -> jnp.ndarray:
     """Y = X @ W[type] (+ per-row scale), X presorted by type. -> [M, n]."""
+    if x_sorted.shape[0] == 0:
+        # empty block (e.g. a sampled hop with no edges): no tiles to sweep
+        return jnp.zeros((0, w.shape[-1]), x_sorted.dtype)
     x_p = pad_rows(x_sorted, lay.row_map)
     scale_p = None
     if row_scale is not None:
@@ -262,6 +265,8 @@ def edge_softmax_agg(
     backend: Backend = "xla",
 ) -> jnp.ndarray:
     """out[v] = Σ_{e→v} softmax(scores)_e · msg_e — the fused traversal region."""
+    if msg.shape[0] == 0:
+        return jnp.zeros((num_nodes, msg.shape[-1]), msg.dtype)
     if backend == "xla" or bc is None:
         return R.softmax_agg_ref(scores, msg, dst, num_nodes)
     interpret = backend == "pallas_interpret"
@@ -319,6 +324,8 @@ def weighted_agg(
     backend: Backend = "xla",
 ) -> jnp.ndarray:
     """out[v] = Σ_{e→v} scale_e · msg_e."""
+    if msg.shape[0] == 0:
+        return jnp.zeros((num_nodes, msg.shape[-1]), msg.dtype)
     if backend == "xla" or bc is None:
         return R.weighted_agg_ref(scale, msg, dst, num_nodes)
     if scale is None:

@@ -233,11 +233,18 @@ def _dot_flops(mod: HloModule, op: Op) -> float:
     out_elems = 1
     for d in out_dims:
         out_elems *= d
-    mlhs = re.search(r"dot\(%?([\w.\-]+)", op.line)
     mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
     contraction = 1
-    if mlhs and mcd and mlhs.group(1) in mod.op_types:
-        lhs_dims = _shape_dims(mod.op_types[mlhs.group(1)])
+    lhs_dims = None
+    # newer XLA prints operand types inline: dot(f32[64,128]{1,0} %lhs, ...)
+    minline = re.search(r"dot\(([a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?)\s+%", op.line)
+    if minline:
+        lhs_dims = _shape_dims(minline.group(1))
+    else:  # older format: dot(%lhs, %rhs)
+        mlhs = re.search(r"dot\(%?([\w.\-]+)", op.line)
+        if mlhs and mlhs.group(1) in mod.op_types:
+            lhs_dims = _shape_dims(mod.op_types[mlhs.group(1)])
+    if lhs_dims is not None and mcd:
         for idx in mcd.group(1).split(","):
             if idx and int(idx) < len(lhs_dims):
                 contraction *= lhs_dims[int(idx)]

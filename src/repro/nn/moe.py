@@ -16,7 +16,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.nn.common import dense_init, mesh_ctx, shard

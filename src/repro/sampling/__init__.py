@@ -1,0 +1,20 @@
+"""Hetero mini-batch sampling: fanout neighbor sampling over ``HeteroGraph``
+producing message-flow-graph blocks, plus a prefetching mini-batch loader.
+
+The subsystem turns the full-graph Hector reproduction into a servable
+system: the same lowered IR plans and Pallas/XLA kernels run unchanged on
+each sampled block, because every block *is* a ``HeteroGraph`` with the
+full per-graph preprocessing (etype-sorted edges, dst CSR, compact
+materialization map) recomputed on the sampled subgraph.
+"""
+from repro.sampling.sampler import (  # noqa: F401
+    Block,
+    BlockSequence,
+    FanoutSampler,
+)
+from repro.sampling.loader import (  # noqa: F401
+    MiniBatch,
+    MiniBatchLoader,
+    SeedStream,
+    build_minibatch,
+)

@@ -1,0 +1,80 @@
+"""Shape bucketing for sampled blocks (the serving fast path).
+
+Every sampled block has fresh (node, edge, unique-pair) counts, so each
+mini-batch would otherwise trigger fresh XLA compilations — multi-second
+stalls that dwarf the actual forward pass on every request. Bucketing pads
+each block graph to power-of-two sizes with *inert* pad structure, so the
+set of compiled shapes is logarithmic in graph size and serving hits warm
+caches after the first few batches.
+
+Pad structure is numerically invisible to real outputs:
+
+* pad nodes carry the max node type (keeps the presorted-by-type invariant)
+  and only appear as endpoints of pad edges;
+* pad edges connect pad sources to the first pad node, so they aggregate
+  into pad destination rows only;
+* pad (src, etype) pairs are chosen distinct until the unique-pair table
+  reaches its bucket, then one pair is repeated — giving exact control of
+  the compact-materialization table size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import HeteroGraph
+from repro.kernels.layout import pow2ceil
+
+
+def pad_block_graph(bg: HeteroGraph) -> HeteroGraph:
+    """Return ``bg`` padded so nodes/edges/unique-pairs hit power-of-two
+    buckets. The first ``bg.num_nodes`` node IDs and all real edges keep
+    their meaning; everything is rebuilt via ``from_edges`` so every derived
+    product (CSR, compact map, segment pointers) stays consistent."""
+    n, e, u = bg.num_nodes, bg.num_edges, bg.num_unique
+    num_r, num_t = bg.num_etypes, bg.num_ntypes
+
+    u_pad = pow2ceil(u + 1)          # +1 guarantees >= 1 pad pair to spend
+    k_u = u_pad - u                  # distinct pad (src, etype) pairs needed
+    e_pad = pow2ceil(e + k_u)
+    k_e = e_pad - e
+    n_extra = max(1, -(-k_u // num_r))   # pad sources to host k_u pairs
+    n_pad = pow2ceil(n + n_extra)
+
+    # distinct pad pairs first, then repeats of pair 0 up to the edge bucket
+    pair_src = (n + np.arange(k_u, dtype=np.int64) // num_r).astype(np.int32)
+    pair_et = (np.arange(k_u, dtype=np.int64) % num_r).astype(np.int32)
+    pick = np.concatenate([np.arange(k_u, dtype=np.int64),
+                           np.zeros(k_e - k_u, dtype=np.int64)])
+    pad_src = pair_src[pick]
+    pad_et = pair_et[pick]
+    pad_dst = np.full(k_e, n, dtype=np.int32)  # all into the first pad node
+
+    node_type = np.concatenate([
+        bg.node_type,
+        np.full(n_pad - n, num_t - 1, dtype=np.int32),
+    ])
+    hg = HeteroGraph.from_edges(
+        np.concatenate([bg.src, pad_src]),
+        np.concatenate([bg.dst, pad_dst]),
+        np.concatenate([bg.etype, pad_et]),
+        num_nodes=n_pad,
+        num_etypes=num_r,
+        node_type=node_type,
+        num_ntypes=num_t,
+    )
+    assert hg.num_edges == e_pad and hg.num_unique == u_pad, (
+        hg.num_edges, e_pad, hg.num_unique, u_pad)
+    return hg
+
+
+def pad_index(idx: np.ndarray, target: int, fill: int = 0) -> np.ndarray:
+    """Pad a gather-index vector to ``target`` entries with a benign index.
+
+    The padded entries gather arbitrary-but-finite rows that only ever feed
+    pad positions downstream."""
+    extra = target - idx.shape[0]
+    if extra < 0:
+        raise ValueError("index longer than bucket target")
+    if extra == 0:
+        return idx
+    return np.concatenate([idx, np.full(extra, fill, dtype=idx.dtype)])

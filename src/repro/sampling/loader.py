@@ -1,0 +1,192 @@
+"""Prefetching mini-batch loader for sampled RGNN blocks.
+
+Mirrors the queue pattern of ``data/pipeline.py``: a background thread pulls
+seed batches from a deterministic stream, runs the fanout sampler, and —
+crucially — builds the tile-aligned ``KernelLayouts`` for every block on the
+host, off the accelerator path. The consumer (training or serving loop) only
+ever dequeues device-ready ``MiniBatch`` bundles, so layout construction
+(NumPy segment padding / CSR blocking) overlaps with accelerator compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, List, Optional, Union
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import codegen
+from repro.core.graph import GraphTensors
+from repro.kernels.layout import pow2ceil
+from repro.sampling.bucketing import pad_block_graph, pad_index
+from repro.sampling.sampler import BlockSequence, FanoutSampler
+
+
+class SeedStream:
+    """Deterministic seed-node request stream: step -> seed ID batch.
+
+    Models a serving request stream (seeds drawn with replacement, so
+    duplicate seeds within a batch are exercised). ``batch(step)`` is a pure
+    function of (seed, step), the same restart-determinism contract as
+    ``SyntheticLMStream``.
+    """
+
+    def __init__(self, num_nodes: int, batch_size: int, seed: int = 0):
+        self.num_nodes = num_nodes
+        self.batch_size = batch_size
+        self.seed = seed
+
+    def batch(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        return rng.integers(0, self.num_nodes, size=self.batch_size,
+                            dtype=np.int32)
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    """Device-ready bundle for one sampled batch: per-hop graph tensors and
+    kernel layouts, plus the gather maps that chain hops and restore the
+    requested seed order."""
+
+    step: int
+    seq: BlockSequence
+    tensors: List[GraphTensors]
+    layouts: List[codegen.KernelLayouts]
+    input_ids: jnp.ndarray          # [n_input] global IDs feeding hop 0
+    dst_locals: List[jnp.ndarray]   # per hop: local rows of the out frontier
+    seed_perm: jnp.ndarray          # final-frontier row of each seed
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.tensors)
+
+
+def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
+                    node_block: int = 128, bucket: bool = False) -> MiniBatch:
+    """Host-side assembly of a ``MiniBatch`` from a sampled ``BlockSequence``.
+
+    With ``bucket=True`` (the serving fast path) each block graph, its
+    kernel layouts, and every gather-index vector are padded to power-of-two
+    buckets, so the compiled-shape set is small and repeated batches run
+    from warm compilation caches. Padding is numerically inert: pad
+    nodes/edges only feed pad rows, which the hop-chaining gathers never
+    read.
+    """
+    graphs = [b.graph for b in seq.blocks]
+    input_ids = seq.input_node_ids
+    dst_locals = [b.dst_local for b in seq.blocks]
+    if bucket:
+        graphs = [pad_block_graph(g) for g in graphs]
+        input_ids = pad_index(input_ids, graphs[0].num_nodes)
+        # hop l's output rows become hop l+1's (padded) node-feature rows;
+        # the last hop only needs to cover the seed gather, so any stable
+        # bucket works.
+        dst_locals = [
+            pad_index(d, graphs[i + 1].num_nodes if i + 1 < len(graphs)
+                      else pow2ceil(d.shape[0]))
+            for i, d in enumerate(dst_locals)
+        ]
+    return MiniBatch(
+        step=step,
+        seq=seq,
+        tensors=[g.to_tensors() for g in graphs],
+        layouts=[codegen.build_kernel_layouts(g, tile=tile,
+                                              node_block=node_block,
+                                              bucket=bucket)
+                 for g in graphs],
+        input_ids=jnp.asarray(input_ids),
+        dst_locals=[jnp.asarray(d) for d in dst_locals],
+        seed_perm=jnp.asarray(seq.seed_perm),
+    )
+
+
+class MiniBatchLoader:
+    """Background-thread prefetch of sampled mini-batches.
+
+    ``seed_source`` is a ``SeedStream`` or any ``step -> np.ndarray``
+    callable. Iteration yields ``MiniBatch`` in step order; with
+    ``num_batches`` set the loader raises ``StopIteration`` afterwards.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(
+        self,
+        sampler: FanoutSampler,
+        seed_source: Union[SeedStream, Callable[[int], np.ndarray]],
+        *,
+        tile: int = 128,
+        node_block: int = 128,
+        bucket: bool = False,
+        depth: int = 2,
+        start_step: int = 0,
+        num_batches: Optional[int] = None,
+    ):
+        self.sampler = sampler
+        self._seeds_for = (seed_source.batch if isinstance(seed_source, SeedStream)
+                           else seed_source)
+        self.tile = tile
+        self.node_block = node_block
+        self.bucket = bucket
+        self.num_batches = num_batches
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = False
+        self._stop = threading.Event()
+        self._start_step = start_step
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _build(self, step: int) -> MiniBatch:
+        seq = self.sampler.sample(self._seeds_for(step), batch_index=step)
+        return build_minibatch(seq, step=step, tile=self.tile,
+                               node_block=self.node_block, bucket=self.bucket)
+
+    def _fill(self):
+        step = self._start_step
+        item = None
+        while not self._stop.is_set():
+            if item is None:
+                if (self.num_batches is not None
+                        and step - self._start_step >= self.num_batches):
+                    item = self._SENTINEL
+                else:
+                    try:
+                        item = self._build(step)
+                    except BaseException as e:  # surface in the consumer
+                        item = e
+                    step += 1
+            try:
+                self.q.put(item, timeout=0.5)
+            except queue.Full:
+                continue
+            if item is self._SENTINEL or isinstance(item, BaseException):
+                break
+            item = None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> MiniBatch:
+        if self._done:
+            raise StopIteration
+        item = self.q.get()
+        if item is self._SENTINEL:
+            self._done = True
+            raise StopIteration
+        if isinstance(item, BaseException):
+            # the producer thread died on this; don't hang the serving loop
+            self._done = True
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        # drain so a blocked producer can observe the stop flag
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

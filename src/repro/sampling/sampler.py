@@ -1,0 +1,200 @@
+"""Deterministic per-etype fanout neighbor sampling over ``HeteroGraph``.
+
+Message-flow-graph ("block") semantics follow the DGL/GraphBolt shape: seed
+nodes are the destination frontier of the last hop; each hop samples up to
+``fanout[etype]`` incoming edges per (destination node, edge type) from the
+*full* graph, and the union of the frontier with the sampled sources becomes
+the next (inner) frontier. The block for hop ``l`` is a standalone
+``HeteroGraph`` over that union, so all Hector preprocessing — etype-sorted
+edges, destination CSR, and the compact-materialization map (unique
+(src, etype) pairs, the data-reuse structure HiHGNN motivates preserving) —
+is recomputed per block and the existing kernels/layouts apply unchanged.
+
+Node-ID bookkeeping exploits a seed-graph invariant: ``HeteroGraph`` nodes
+are presorted by node type, so sorting global IDs also sorts by
+(ntype, id) and every frontier is represented as a sorted unique ID array.
+Local IDs are then ``searchsorted`` positions, and each block's destination
+frontier ordering matches the next block's node ordering by construction.
+
+Sampling is seeded per (sampler seed, batch index) — the same determinism
+contract as ``data/pipeline.py`` — so restarts and replicas replay the
+exact same mini-batch stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Union
+
+import numpy as np
+
+from repro.core.graph import HeteroGraph
+
+FanoutSpec = Union[int, Dict[int, int], Sequence[int], np.ndarray]
+
+FULL_NEIGHBORHOOD = -1  # fanout value meaning "keep every in-edge"
+
+
+def normalize_fanout(fanout: FanoutSpec, num_etypes: int) -> np.ndarray:
+    """Per-etype fanout vector [R]; -1 means the full neighborhood."""
+    if isinstance(fanout, (int, np.integer)):
+        return np.full(num_etypes, int(fanout), dtype=np.int64)
+    if isinstance(fanout, dict):
+        arr = np.zeros(num_etypes, dtype=np.int64)  # unlisted etypes: drop
+        for et, k in fanout.items():
+            arr[int(et)] = int(k)
+        return arr
+    arr = np.asarray(fanout, dtype=np.int64)
+    if arr.shape != (num_etypes,):
+        raise ValueError(
+            f"per-etype fanout must have shape ({num_etypes},), got {arr.shape}"
+        )
+    return arr
+
+
+@dataclasses.dataclass
+class Block:
+    """One hop of a sampled message-flow graph.
+
+    ``graph`` is a valid standalone ``HeteroGraph`` over the block's local
+    node set (the input frontier of this hop). Only the rows selected by
+    ``dst_local`` — the output frontier — carry meaningful aggregations.
+    """
+
+    graph: HeteroGraph
+    node_ids: np.ndarray   # [n_local] global node IDs (sorted ascending)
+    dst_local: np.ndarray  # [n_dst] local indices of the output frontier
+
+    @property
+    def num_src(self) -> int:
+        return int(self.node_ids.shape[0])
+
+    @property
+    def num_dst(self) -> int:
+        return int(self.dst_local.shape[0])
+
+    @property
+    def dst_ids(self) -> np.ndarray:
+        return self.node_ids[self.dst_local]
+
+
+@dataclasses.dataclass
+class BlockSequence:
+    """Per-hop blocks in execution order (``blocks[0]`` is the innermost
+    hop; ``blocks[-1]``'s output frontier covers the seeds)."""
+
+    blocks: List[Block]
+    seeds: np.ndarray      # the requested seed IDs, order and dupes preserved
+    seed_perm: np.ndarray  # [len(seeds)] row of each seed in the final output
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def input_node_ids(self) -> np.ndarray:
+        """Global IDs whose input features the first hop consumes."""
+        return self.blocks[0].node_ids
+
+    def describe(self) -> str:
+        lines = [f"BlockSequence(seeds={len(self.seeds)})"]
+        for i, b in enumerate(self.blocks):
+            lines.append(
+                f"  hop {i}: {b.num_src} nodes -> {b.num_dst} dst, "
+                f"{b.graph.num_edges} edges, "
+                f"compaction {b.graph.entity_compaction_ratio:.2f}"
+            )
+        return "\n".join(lines)
+
+
+class FanoutSampler:
+    """Seeded per-etype fanout neighbor sampler emitting ``BlockSequence``s.
+
+    ``fanouts`` is one spec per hop, listed input-to-output (hop 0 is the
+    innermost layer, matching execution order); sampling itself proceeds
+    from the seeds backwards.
+    """
+
+    def __init__(self, hg: HeteroGraph, fanouts: Sequence[FanoutSpec],
+                 seed: int = 0):
+        if not fanouts:
+            raise ValueError("need at least one hop fanout")
+        self.hg = hg
+        self.fanouts = [normalize_fanout(f, hg.num_etypes) for f in fanouts]
+        self.seed = seed
+        # dst-sorted companions of the dst CSR, so a frontier's in-edges are
+        # contiguous ranges with O(1) lookup of (src, etype) per edge.
+        self._src_d = hg.src[hg.perm_dst]
+        self._etype_d = hg.etype[hg.perm_dst]
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.fanouts)
+
+    # ------------------------------------------------------------------
+    def sample(self, seeds: np.ndarray, batch_index: int = 0) -> BlockSequence:
+        seeds = np.asarray(seeds, dtype=np.int32)
+        if seeds.ndim != 1 or seeds.size == 0:
+            raise ValueError("seeds must be a non-empty 1-D int array")
+        if seeds.min() < 0 or seeds.max() >= self.hg.num_nodes:
+            raise ValueError("seed node id out of range")
+        rng = np.random.default_rng((self.seed, int(batch_index)))
+
+        frontier = np.unique(seeds)
+        seed_perm = np.searchsorted(frontier, seeds).astype(np.int32)
+
+        blocks: List[Block] = []
+        for fanout in reversed(self.fanouts):
+            src, dst, et = self._sample_in_edges(frontier, fanout, rng)
+            node_ids = np.unique(np.concatenate([frontier, src]))
+            bg = HeteroGraph.from_edges(
+                np.searchsorted(node_ids, src).astype(np.int32),
+                np.searchsorted(node_ids, dst).astype(np.int32),
+                et,
+                num_nodes=int(node_ids.shape[0]),
+                num_etypes=self.hg.num_etypes,
+                node_type=self.hg.node_type[node_ids],
+                num_ntypes=self.hg.num_ntypes,
+            )
+            dst_local = np.searchsorted(node_ids, frontier).astype(np.int32)
+            blocks.append(Block(graph=bg, node_ids=node_ids.astype(np.int32),
+                                dst_local=dst_local))
+            frontier = node_ids
+        blocks.reverse()
+        return BlockSequence(blocks=blocks, seeds=seeds, seed_perm=seed_perm)
+
+    # ------------------------------------------------------------------
+    def _sample_in_edges(self, frontier: np.ndarray, fanout: np.ndarray,
+                         rng: np.random.Generator):
+        """Sample ≤ fanout[etype] in-edges per (frontier node, etype),
+        without replacement. Returns global (src, dst, etype) arrays."""
+        hg = self.hg
+        starts = hg.dst_ptr[frontier].astype(np.int64)
+        counts = (hg.dst_ptr[frontier + 1] - hg.dst_ptr[frontier]).astype(np.int64)
+        total = int(counts.sum())
+        empty = np.zeros(0, dtype=np.int32)
+        if total == 0:
+            return empty, empty, empty
+
+        # dst-sorted position of every candidate in-edge of the frontier
+        offs = np.concatenate([[0], np.cumsum(counts)])
+        pos = (np.arange(total, dtype=np.int64)
+               - np.repeat(offs[:-1], counts) + np.repeat(starts, counts))
+        owner = np.repeat(np.arange(len(frontier), dtype=np.int64), counts)
+        et = self._etype_d[pos].astype(np.int64)
+
+        # rank candidates within each (owner, etype) group by a random key;
+        # keep ranks < fanout[etype]  == uniform sampling w/o replacement.
+        group = owner * hg.num_etypes + et
+        order = np.lexsort((rng.random(total), group))
+        g_sorted = group[order]
+        boundary = np.concatenate([[True], g_sorted[1:] != g_sorted[:-1]])
+        group_start = np.flatnonzero(boundary)
+        group_len = np.diff(np.concatenate([group_start, [total]]))
+        rank = np.arange(total, dtype=np.int64) - np.repeat(group_start, group_len)
+        cap = fanout[et[order]]
+        keep = (cap == FULL_NEIGHBORHOOD) | (rank < cap)
+
+        sel = pos[order][keep]
+        src = self._src_d[sel]
+        dst = frontier[owner[order][keep]].astype(np.int32)
+        return src.astype(np.int32), dst, self._etype_d[sel].astype(np.int32)

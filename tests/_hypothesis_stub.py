@@ -1,0 +1,89 @@
+"""Deterministic stand-in for ``hypothesis`` when the real package is absent.
+
+The tier-1 suite must collect (and keep its property tests meaningful) on
+machines without optional dev deps. ``conftest.py`` installs this module as
+``sys.modules["hypothesis"]`` only when the real library is missing; each
+``@given`` test then runs ``max_examples`` seeded pseudo-random examples.
+Seeding is per-test (CRC32 of the qualname), so runs are reproducible and
+independent of execution order.
+
+Only the strategy surface the repo's tests use is implemented:
+``integers``, ``sampled_from``, ``lists``, ``floats``, ``booleans``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+
+class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(values) -> _Strategy:
+        vals = list(values)
+        return _Strategy(lambda rng: vals[int(rng.integers(len(vals)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0,
+               **_kw) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = 20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base, i))
+                drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn parameters from pytest's fixture resolution (the
+        # real hypothesis does the same); leave any genuine fixture args.
+        params = [p for name, p in inspect.signature(fn).parameters.items()
+                  if name not in strategy_kwargs]
+        wrapper.__signature__ = inspect.Signature(params)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"

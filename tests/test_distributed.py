@@ -113,7 +113,7 @@ def test_compressed_psum_across_pods():
         import numpy as np, jax, jax.numpy as jnp
         from functools import partial
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        from repro.compat import shard_map
         from repro.optim.compression import compressed_psum
         mesh = jax.make_mesh((4,), ('pod',))
         rng = np.random.default_rng(0)

@@ -1,0 +1,227 @@
+"""Hetero mini-batch sampling subsystem: determinism, block layout
+invariants, full-fanout equivalence with the full-graph forward, bucketing,
+the prefetching loader, and the serving driver."""
+import collections
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import HeteroGraph, synthetic_heterograph
+from repro.core.module import HectorStack
+from repro.models import hgt_program, rgat_program, rgcn_program
+from repro.sampling import (FanoutSampler, MiniBatchLoader, SeedStream,
+                            build_minibatch)
+from repro.sampling.bucketing import pad_block_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return synthetic_heterograph(num_nodes=120, num_edges=900, num_ntypes=4,
+                                 num_etypes=7, seed=0)
+
+
+@pytest.fixture(scope="module")
+def feats(graph):
+    rng = np.random.default_rng(1)
+    return jnp.asarray(rng.normal(size=(graph.num_nodes, 16)), jnp.float32)
+
+
+SEEDS = np.array([3, 50, 7, 3, 119, 0], dtype=np.int32)  # dupes on purpose
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_sampler_deterministic_under_seed(graph):
+    a = FanoutSampler(graph, [3, 5], seed=11).sample(SEEDS, batch_index=4)
+    b = FanoutSampler(graph, [3, 5], seed=11).sample(SEEDS, batch_index=4)
+    for ba, bb in zip(a.blocks, b.blocks):
+        np.testing.assert_array_equal(ba.graph.src, bb.graph.src)
+        np.testing.assert_array_equal(ba.graph.dst, bb.graph.dst)
+        np.testing.assert_array_equal(ba.graph.etype, bb.graph.etype)
+        np.testing.assert_array_equal(ba.node_ids, bb.node_ids)
+    np.testing.assert_array_equal(a.seed_perm, b.seed_perm)
+
+
+def test_sampler_varies_with_batch_index(graph):
+    s = FanoutSampler(graph, [2, 2], seed=0)
+    a = s.sample(SEEDS, batch_index=0)
+    b = s.sample(SEEDS, batch_index=1)
+    same = (a.blocks[0].graph.num_edges == b.blocks[0].graph.num_edges
+            and np.array_equal(a.blocks[0].node_ids, b.blocks[0].node_ids))
+    assert not same
+
+
+# ---------------------------------------------------------------------------
+# block invariants
+# ---------------------------------------------------------------------------
+def _check_block_graph(bg: HeteroGraph):
+    # etype-sorted canonical edges + consistent segment pointers
+    assert np.all(np.diff(bg.etype) >= 0)
+    np.testing.assert_array_equal(
+        bg.etype_ptr,
+        np.concatenate([[0], np.cumsum(np.bincount(
+            bg.etype, minlength=bg.num_etypes))]))
+    # dst CSR is a valid partition of the dst-sorted edges
+    assert bg.dst_ptr[0] == 0 and bg.dst_ptr[-1] == bg.num_edges
+    assert np.all(np.diff(bg.dst_ptr) >= 0)
+    np.testing.assert_array_equal(bg.dst[bg.perm_dst], bg.dst_sorted)
+    assert np.all(np.diff(bg.dst_sorted) >= 0)
+    # compact materialization map resolves to the original (src, etype)
+    np.testing.assert_array_equal(bg.unique_src[bg.edge_to_unique], bg.src)
+    np.testing.assert_array_equal(bg.unique_etype[bg.edge_to_unique], bg.etype)
+    assert np.all(np.diff(bg.unique_etype) >= 0)
+    assert bg.num_unique <= max(1, bg.num_edges)
+    # nodes presorted by type
+    assert np.all(np.diff(bg.node_type) >= 0)
+
+
+def test_block_layout_invariants(graph):
+    seq = FanoutSampler(graph, [4, 2, 3], seed=3).sample(SEEDS)
+    assert seq.num_hops == 3
+    for i, blk in enumerate(seq.blocks):
+        _check_block_graph(blk.graph)
+        # local/global ID mapping is consistent
+        assert blk.node_ids.shape[0] == blk.graph.num_nodes
+        assert np.all(np.diff(blk.node_ids) > 0)
+        np.testing.assert_array_equal(
+            graph.node_type[blk.node_ids], blk.graph.node_type)
+        # every sampled edge exists in the parent graph
+        full = set(zip(graph.src.tolist(), graph.dst.tolist(),
+                       graph.etype.tolist()))
+        for s, d, t in zip(blk.node_ids[blk.graph.src],
+                           blk.node_ids[blk.graph.dst], blk.graph.etype):
+            assert (s, d, t) in full
+        # chaining: this hop's dst frontier is the next hop's node set
+        if i + 1 < seq.num_hops:
+            np.testing.assert_array_equal(
+                blk.dst_ids, seq.blocks[i + 1].node_ids)
+    np.testing.assert_array_equal(
+        seq.blocks[-1].dst_ids[seq.seed_perm], SEEDS)
+
+
+def test_fanout_cap_respected(graph):
+    fanouts = [2, 4]
+    seq = FanoutSampler(graph, fanouts, seed=9).sample(
+        np.arange(30, dtype=np.int32), batch_index=1)
+    for blk, cap in zip(seq.blocks, fanouts):
+        per_pair = collections.Counter(
+            zip(blk.graph.dst.tolist(), blk.graph.etype.tolist()))
+        assert max(per_pair.values(), default=0) <= cap
+
+
+def test_full_fanout_keeps_entire_neighborhood(graph):
+    seq = FanoutSampler(graph, [-1], seed=0).sample(SEEDS)
+    blk = seq.blocks[0]
+    sampled_in_deg = np.bincount(blk.node_ids[blk.graph.dst],
+                                 minlength=graph.num_nodes)
+    full_in_deg = np.diff(graph.dst_ptr)
+    for v in np.unique(SEEDS):
+        assert sampled_in_deg[v] == full_in_deg[v]
+
+
+def test_bucketed_block_graph_is_padded_superset(graph):
+    seq = FanoutSampler(graph, [3, 3], seed=5).sample(SEEDS)
+    for blk in seq.blocks:
+        bg = blk.graph
+        padded = pad_block_graph(bg)
+        _check_block_graph(padded)
+        for dim in (padded.num_nodes, padded.num_edges, padded.num_unique):
+            assert dim & (dim - 1) == 0  # power of two
+        # real edges survive: pad edges all point at pad nodes
+        real = (padded.src < bg.num_nodes) & (padded.dst < bg.num_nodes)
+        assert int(real.sum()) == bg.num_edges
+        key = lambda s, d, t: set(zip(s.tolist(), d.tolist(), t.tolist()))
+        assert key(padded.src[real], padded.dst[real], padded.etype[real]) \
+            == key(bg.src, bg.dst, bg.etype)
+
+
+# ---------------------------------------------------------------------------
+# sampled forward == full-graph forward at full fanout
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("prog_fn", [rgcn_program, rgat_program, hgt_program])
+@pytest.mark.parametrize("bucket", [False, True])
+def test_full_fanout_matches_full_graph(graph, feats, prog_fn, bucket):
+    stack = HectorStack([prog_fn(16, 12), prog_fn(12, 6)], graph,
+                        tile=8, node_block=8, jit=False)
+    params = stack.init(jax.random.key(0))
+    full = stack.apply(params, {"feature": feats})
+    seq = FanoutSampler(graph, [-1, -1], seed=0).sample(SEEDS)
+    mb = build_minibatch(seq, tile=8, node_block=8, bucket=bucket)
+    out = stack.apply_blocks(params, mb, feats)
+    assert out.shape == (len(SEEDS), 6)
+    np.testing.assert_allclose(out, full[SEEDS], rtol=2e-4, atol=2e-4)
+
+
+def test_full_fanout_matches_full_graph_pallas(graph, feats):
+    stack = HectorStack([rgat_program(16, 12), rgat_program(12, 6)], graph,
+                        tile=8, node_block=8, backend="pallas_interpret",
+                        jit=False)
+    params = stack.init(jax.random.key(0))
+    full = stack.apply(params, {"feature": feats})
+    mb = build_minibatch(FanoutSampler(graph, [-1, -1]).sample(SEEDS),
+                         tile=8, node_block=8, bucket=True)
+    out = stack.apply_blocks(params, mb, feats)
+    np.testing.assert_allclose(out, full[SEEDS], rtol=2e-4, atol=2e-4)
+
+
+def test_partial_fanout_runs_and_is_finite(graph, feats):
+    stack = HectorStack([rgat_program(16, 12), rgat_program(12, 6)], graph,
+                        tile=8, node_block=8, jit=False)
+    params = stack.init(jax.random.key(0))
+    mb = build_minibatch(FanoutSampler(graph, [2, 3], seed=1).sample(SEEDS),
+                         tile=8, node_block=8, bucket=True)
+    out = stack.apply_blocks(params, mb, feats)
+    assert out.shape == (len(SEEDS), 6)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# loader
+# ---------------------------------------------------------------------------
+def test_loader_prefetch_deterministic_and_bounded(graph):
+    sampler = FanoutSampler(graph, [3, 3], seed=2)
+    stream = SeedStream(graph.num_nodes, 8, seed=5)
+    a = MiniBatchLoader(sampler, stream, tile=8, node_block=8, num_batches=3)
+    b = MiniBatchLoader(sampler, stream, tile=8, node_block=8, num_batches=3)
+    try:
+        batches_a, batches_b = list(a), list(b)
+    finally:
+        a.close()
+        b.close()
+    assert [mb.step for mb in batches_a] == [0, 1, 2]
+    for ma, mb_ in zip(batches_a, batches_b):
+        np.testing.assert_array_equal(ma.seq.blocks[0].graph.src,
+                                      mb_.seq.blocks[0].graph.src)
+        np.testing.assert_array_equal(np.asarray(ma.input_ids),
+                                      np.asarray(mb_.input_ids))
+    # exhausted loader keeps raising StopIteration
+    with pytest.raises(StopIteration):
+        next(a)
+
+
+def test_loader_close_mid_stream(graph):
+    sampler = FanoutSampler(graph, [2], seed=0)
+    loader = MiniBatchLoader(sampler, SeedStream(graph.num_nodes, 4, seed=0),
+                             tile=8, node_block=8)
+    next(loader)
+    loader.close()
+    assert not loader._thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# serving driver
+# ---------------------------------------------------------------------------
+def test_serve_rgnn_end_to_end():
+    from repro.launch import serve_rgnn
+    stats = serve_rgnn.serve(
+        model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
+        classes=4, fanouts=[3, 3], batch_size=8, num_batches=3,
+        tile=8, node_block=8, log=lambda *a, **k: None,
+    )
+    assert stats["batches"] == 3
+    assert stats["latency_ms_p50"] > 0
+    assert stats["seeds_per_s"] > 0
+    assert stats["last_preds"].shape == (8,)

@@ -136,7 +136,7 @@ def test_compressed_psum_single_member():
     from functools import partial
     from repro.optim.compression import compressed_psum
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import shard_map
     mesh = jax.make_mesh((1,), ("pod",))
     x = jnp.asarray(np.random.default_rng(2).normal(size=(64,)), jnp.float32)
     f = shard_map(partial(compressed_psum, axis_name="pod"), mesh=mesh,
