@@ -10,6 +10,7 @@ fig10  — memory footprint & compaction ratio (Fig. 10)
 fig11  — hidden-dim sweep (Fig. 11)
 loc    — LoC report (§4.1)
 serve  — sampled mini-batch serving vs full-graph inference
+serve_cached — cache-hit-rate + per-batch latency of the cached serving path
 """
 import argparse
 import sys
@@ -18,13 +19,14 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig8,table5,fig9,fig10,fig11,loc,serve")
+                    help="comma list: fig8,table5,fig9,fig10,fig11,loc,"
+                         "serve,serve_cached")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig8_speedup, fig9_breakdown, fig10_memory,
-                            fig11_dims, loc_report, serve_sampled,
-                            table5_opts)
+                            fig11_dims, loc_report, serve_cached,
+                            serve_sampled, table5_opts)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -35,6 +37,7 @@ def main() -> None:
         ("fig9", fig9_breakdown.run),
         ("fig8", fig8_speedup.run),
         ("serve", serve_sampled.run),
+        ("serve_cached", serve_cached.run),
     ]
     for name, fn in jobs:
         if only and name not in only:

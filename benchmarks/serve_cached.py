@@ -1,0 +1,103 @@
+"""Cache-hit-rate + per-batch latency microbenchmark for cached serving.
+
+Runs the serving driver over power-law repeat traffic (the seed stream
+cycles over a few distinct batches) twice — cold path (no caches) vs the
+full cached pipeline (sampled-block LRU + KernelLayouts LRU + whole-plan
+compiled executor) — and reports steady-state per-batch latency, cache hit
+rates, and compiled-executor trace counts.
+
+``--ci`` runs a small interpret-mode configuration and *asserts* the
+steady-state contract the caches exist for: zero executor retraces after
+warmup, every repeated batch served from the block cache (zero host-side
+KernelLayouts rebuilds for repeats), and exactly one compiled trace per
+shape bucket. A retracing or cache regression fails the step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import csv_row
+from repro.launch.serve_rgnn import serve
+
+# one bucketed shape set, small enough for interpret mode in CI
+CONFIG = dict(
+    model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
+    classes=4, fanouts=[3, 3], batch_size=8, tile=8, node_block=8,
+    bucket=True, seed=0,
+)
+DISTINCT = 3          # distinct seed batches the stream cycles over
+NUM_BATCHES = 12
+
+
+def run(out=print, backend: str = "xla", num_batches: int = NUM_BATCHES):
+    quiet = dict(log=lambda *a, **k: None, backend=backend,
+                 num_batches=num_batches, repeat_after=DISTINCT, **CONFIG)
+    uncached = serve(cache_blocks=0, cache_layouts=0, **quiet)
+    cached = serve(cache_blocks=32, cache_layouts=128, **quiet)
+
+    out(csv_row("serve_cached/uncached_batch", uncached["latency_ms_p50"] / 1e3,
+                f"traces={uncached['executor_traces']}"))
+    out(csv_row(
+        "serve_cached/cached_batch", cached["latency_ms_p50"] / 1e3,
+        f"traces={cached['executor_traces']};"
+        f"block_hit_rate={cached['block_cache_hit_rate']:.2f};"
+        f"retraces_after_warmup={cached['retraces_after_warmup']}"))
+    return uncached, cached
+
+
+def ci_check(backend: str = "pallas_interpret") -> None:
+    """Interpret-mode retracing/caching regression gate (exit 1 on failure)."""
+    _, cached = run(out=lambda *_: None, backend=backend)
+    n_repeats = NUM_BATCHES - DISTINCT
+    failures = []
+    if cached["retraces_after_warmup"] != 0:
+        failures.append(
+            f"executor retraced {cached['retraces_after_warmup']}x after "
+            f"warmup (expected 0)")
+    # steady state: one compiled trace per shape bucket, every later batch a
+    # compile-cache hit
+    if cached["executor_traces"] != cached["executor_compiled"]:
+        failures.append(
+            f"trace count {cached['executor_traces']} != compiled entries "
+            f"{cached['executor_compiled']} (each bucket must trace once)")
+    if cached["executor_traces"] > DISTINCT:
+        failures.append(
+            f"{cached['executor_traces']} traces for {DISTINCT} distinct "
+            f"batches (bucketing regressed)")
+    # every repeated seed batch must come from the sampled-block cache, i.e.
+    # zero host-side sampling/KernelLayouts work for repeats
+    if cached["block_cache_misses"] != DISTINCT:
+        failures.append(
+            f"{cached['block_cache_misses']} block-cache misses for "
+            f"{DISTINCT} distinct batches")
+    if cached["block_cache_hits"] != n_repeats:
+        failures.append(
+            f"{cached['block_cache_hits']} block-cache hits, expected "
+            f"{n_repeats} (a repeat rebuilt its layouts host-side)")
+    if failures:
+        for f in failures:
+            print(f"[serve_cached --ci] FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[serve_cached --ci] OK: {cached['executor_traces']} traces for "
+          f"{NUM_BATCHES} batches ({DISTINCT} distinct), 0 retraces after "
+          f"warmup, {cached['block_cache_hits']}/{n_repeats} repeats served "
+          f"from the block cache")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="interpret-mode assertion mode (retrace gate)")
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas_interpret"])
+    args = ap.parse_args(argv)
+    if args.ci:
+        ci_check(backend=args.backend or "pallas_interpret")
+    else:
+        print("name,us_per_call,derived")
+        run(backend=args.backend or "xla")
+
+
+if __name__ == "__main__":
+    main()

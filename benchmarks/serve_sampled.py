@@ -34,7 +34,7 @@ def _sampled_latency(stack, params, feats, graph, fanouts, batch_size,
     try:
         for i, mb in enumerate(loader):
             t0 = time.perf_counter()
-            out = stack.apply_blocks(params, mb, feats)
+            out = stack.apply_blocks(params, mb, feats, compiled=True)
             out.block_until_ready()
             if i >= warmup:
                 times.append(time.perf_counter() - t0)

@@ -21,8 +21,10 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import jax.tree_util as jtu
 import numpy as np
 
+from repro import compat
 from repro.core.graph import GraphTensors, HeteroGraph
 from repro.core.ir import inter_op as I
 from repro.core.ir import intra_op as O
@@ -30,14 +32,36 @@ from repro.kernels import layout as L
 from repro.kernels import ops as K
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class KernelLayouts:
-    """Per-graph tile-aligned layouts for the generated kernels (host-built)."""
+    """Per-graph tile-aligned layouts for the generated kernels (host-built).
+
+    Besides the segment/CSR layouts this carries the *padded gather-index
+    layouts* (§3.3 access schemes composed with the tile padding maps), so
+    the Pallas kernels can gather their input rows in-kernel, and the
+    precomputed per-destination in-degree used by mean aggregation.
+    Registered as a pytree (metadata static) so whole plans can be jitted
+    with the layouts as run-time arguments.
+    """
 
     edge_seg: K.PaddedSegmentsDev      # etype segments over canonical edges
     unique_seg: K.PaddedSegmentsDev    # etype segments over unique (src,etype)
     node_seg: K.PaddedSegmentsDev      # ntype segments over nodes
     blocked: K.BlockedCSRDev           # dst-sorted blocked CSR
+    edge_src_rows: jnp.ndarray         # [Rp_e] padded slot -> src node, or -1
+    edge_dst_rows: jnp.ndarray         # [Rp_e] padded slot -> dst node, or -1
+    unique_src_rows: jnp.ndarray       # [Rp_u] padded slot -> src node, or -1
+    dst_deg: jnp.ndarray               # [N] float32 per-destination in-degree
+
+
+_KL_FIELDS = ("edge_seg", "unique_seg", "node_seg", "blocked",
+              "edge_src_rows", "edge_dst_rows", "unique_src_rows", "dst_deg")
+
+jtu.register_pytree_node(
+    KernelLayouts,
+    lambda kl: (tuple(getattr(kl, f) for f in _KL_FIELDS), None),
+    lambda aux, ch: KernelLayouts(*ch),
+)
 
 
 def build_kernel_layouts(
@@ -66,7 +90,12 @@ def build_kernel_layouts(
         edge_seg=K.padded_segments_dev(edge_ps),
         unique_seg=K.padded_segments_dev(unique_ps),
         node_seg=K.padded_segments_dev(node_ps),
-        blocked=K.blocked_csr_dev(bc, hg.perm_dst),
+        blocked=K.blocked_csr_dev(bc, hg.perm_dst, hg.edge_to_unique),
+        edge_src_rows=jnp.asarray(L.compose_gather_rows(edge_ps, hg.src)),
+        edge_dst_rows=jnp.asarray(L.compose_gather_rows(edge_ps, hg.dst)),
+        unique_src_rows=jnp.asarray(
+            L.compose_gather_rows(unique_ps, hg.unique_src)),
+        dst_deg=jnp.asarray(np.diff(hg.dst_ptr).astype(np.float32)),
     )
 
 
@@ -134,9 +163,6 @@ class _Env:
 
 
 def _elementwise(op: str, args, alpha: float = 0.01):
-    def rank2(x):
-        return x
-
     a = args[0]
     if len(args) == 1:
         if op == "exp":
@@ -247,10 +273,50 @@ def execute_block_sequence(
     return h[seed_perm]
 
 
+# gather schemes whose row lists have a precomposed padded gather-index
+# layout in KernelLayouts (-> eligible for the in-kernel gather kernels)
+_FUSABLE_GATHERS = (O.GatherScheme.BY_EDGE_SRC, O.GatherScheme.BY_EDGE_DST,
+                    O.GatherScheme.BY_UNIQUE_SRC)
+
+# The gather-fused kernels keep the whole ungathered source block resident
+# in VMEM (constant index_map). Sampled serving blocks are small, but a
+# full-graph source table can exceed VMEM (~16 MiB/core), so sources above
+# this budget fall back to the materialized-gather kernels.
+FUSED_GATHER_MAX_SOURCE_BYTES = 4 * 1024 * 1024
+
+
+def _fits_vmem(arr) -> bool:
+    return arr.size * arr.dtype.itemsize <= FUSED_GATHER_MAX_SOURCE_BYTES
+
+
 def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,
                kl: KernelLayouts, backend: str):
     w = weight(op.weight)
-    # resolve X via the gather scheme
+
+    scale = None
+    if op.per_row_scale is not None:
+        scale = env.get_edge_vanilla(op.per_row_scale)
+        if scale.ndim == 2:
+            scale = scale[:, 0]
+
+    # Pallas backends with a typed GEMM: fold the access-scheme gather into
+    # the kernel via the padded gather-index layout — the [rows, k] input
+    # copy is never materialized outside the kernel (paper §3.3).
+    if (backend != "xla" and op.type_index != O.TypeIndex.NONE
+            and op.gather in _FUSABLE_GATHERS
+            and _fits_vmem(env.get(op.x_source))):
+        gmap, lay = {
+            O.GatherScheme.BY_EDGE_SRC: (kl.edge_src_rows, kl.edge_seg),
+            O.GatherScheme.BY_EDGE_DST: (kl.edge_dst_rows, kl.edge_seg),
+            O.GatherScheme.BY_UNIQUE_SRC: (kl.unique_src_rows, kl.unique_seg),
+        }[op.gather]
+        y = K.segment_mm_gather(env.get(op.x_source), w, lay, gmap,
+                                row_scale=scale, backend=backend)
+        out = y[:, 0] if (op.out_cols == 1 and y.shape[-1] == 1) else y
+        env.set(op.out, out)
+        return
+
+    # resolve X via the gather scheme (materialized; XLA fuses the gather)
     if op.gather == O.GatherScheme.BY_EDGE_SRC:
         x = env.get(op.x_source)[gt.src]
         lay = kl.edge_seg
@@ -272,12 +338,6 @@ def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,
             "ntype_ptr": kl.node_seg,
         }.get(op.seg_ptr)
 
-    scale = None
-    if op.per_row_scale is not None:
-        scale = env.get_edge_vanilla(op.per_row_scale)
-        if scale.ndim == 2:
-            scale = scale[:, 0]
-
     if op.type_index == O.TypeIndex.NONE:
         y = x @ w
         if scale is not None:
@@ -286,6 +346,17 @@ def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,
         y = K.segment_mm(x, w, lay, row_scale=scale, backend=backend)
     out = y[:, 0] if (op.out_cols == 1 and y.shape[-1] == 1) else y
     env.set(op.out, out)
+
+
+def _edge_msg(env: _Env, gt: GraphTensors, kl: KernelLayouts, name: str):
+    """Resolve a feature-wide edge var in its *storage* order for the
+    traversal kernels: COMPACT vars stay in the unique-pair table and carry
+    the precomposed slot map, so the per-edge expansion happens in-kernel
+    instead of materializing an [E, d] copy here."""
+    v = env.get(name)
+    if env.plan.layouts.get(name) == I.Layout.COMPACT:
+        return v, gt.edge_to_unique, kl.blocked.edge_map_unique
+    return v, None, kl.blocked.edge_map
 
 
 def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
@@ -313,10 +384,12 @@ def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
                 and backend != "xla"
             ):
                 # fully fused softmax+aggregate traversal kernel
-                msg = env.get_edge_vanilla(nxt.ins[0])
+                msg, msg_rows, slot_map = _edge_msg(env, gt, kl, nxt.ins[0])
                 out = K.edge_softmax_agg(
                     scores, msg, gt.dst, gt.num_nodes,
                     bc=kl.blocked, backend=backend,
+                    msg_rows=msg_rows, msg_slot_map=slot_map,
+                    fuse_gather=_fits_vmem(msg),
                 )
                 env.set(nxt.out, out)
                 env.set(att_name, K.edge_softmax(scores, gt.dst, gt.num_nodes))
@@ -350,19 +423,21 @@ def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
             env.set(s.out, env.params[s.ins[0]][gt.etype])
         elif s.kind == "segment_max":
             x = env.get_edge_vanilla(s.ins[0])
-            mx = jax.ops.segment_max(x, gt.dst, num_segments=gt.num_nodes)
+            mx = compat.segment_max(x, gt.dst, gt.num_nodes)
             env.set(s.out, jnp.where(jnp.isfinite(mx), mx, 0.0))
         elif s.kind == "segment_sum":
-            msg = env.get_edge_vanilla(s.ins[0])
+            msg, msg_rows, slot_map = _edge_msg(env, gt, kl, s.ins[0])
             scale = None
             if s.scale is not None:
                 scale = env.get_edge_vanilla(s.scale)
                 if scale.ndim == 2:
                     scale = scale[:, 0]
             out = K.weighted_agg(scale, msg, gt.dst, gt.num_nodes,
-                                 bc=kl.blocked, backend=backend)
+                                 bc=kl.blocked, backend=backend,
+                                 msg_rows=msg_rows, msg_slot_map=slot_map,
+                                 fuse_gather=_fits_vmem(msg))
             if s.op == "mean":
-                deg = (gt.dst_ptr[1:] - gt.dst_ptr[:-1]).astype(out.dtype)
+                deg = kl.dst_deg.astype(out.dtype)
                 out = out / jnp.maximum(deg, 1.0)[:, None]
             env.set(s.out, out)
         else:

@@ -1,0 +1,148 @@
+"""Whole-plan compiled executors with an explicit compile cache.
+
+The op-by-op ``codegen.execute_plan`` loop is the generated code's *meaning*;
+running it from Python per batch leaves two costs on the serving hot path:
+Python dispatch per op, and — without a stable jit entry point — a retrace
+whenever shapes wobble. The executors here close a lowered plan (or a stack
+of per-hop plans) over one traced function, jit it with the graph tensors,
+kernel layouts, and features as **run-time pytree arguments**, and front it
+with an explicit compile cache keyed by the argument signature (pytree
+structure + leaf shapes/dtypes — i.e. the bucketed layout shapes).
+
+Because sampled blocks are shape-bucketed (sampling/bucketing.py), the
+signature set is small and steady-state serving reuses one compiled
+executable per bucket: zero retraces, zero Python op dispatch. Cache hits,
+misses, and actual traces are counted so tests and the serve_cached
+benchmark can assert the steady state.
+
+Input features are donated to the compiled call on accelerator backends
+(they are freshly gathered per batch, so the executable may reuse their
+buffers for outputs); donation is skipped on CPU where XLA does not
+implement it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codegen
+
+
+def signature(args) -> tuple:
+    """Hashable compile-cache key: pytree structure + leaf shapes/dtypes.
+
+    The treedef carries every static field (graph sizes, layout tile
+    metadata), the leaves carry the bucketed array shapes — together exactly
+    the information that determines the compiled executable.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return treedef, tuple(
+        (jnp.shape(l), jnp.result_type(l).name) for l in leaves)
+
+
+def _donation_supported() -> bool:
+    return jax.default_backend() not in ("cpu",)
+
+
+class _CachedExecutor:
+    """Shared machinery: explicit signature -> jitted-callable cache."""
+
+    def __init__(self, donate_feats: bool, feats_argnum: int):
+        self._cache: Dict[tuple, object] = {}
+        self._donate = donate_feats and _donation_supported()
+        self._feats_argnum = feats_argnum
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.trace_count = 0   # incremented inside the traced fn: counts
+        #                        actual (re)traces, not cache bookkeeping
+
+    def _traced(self, *args):
+        raise NotImplementedError
+
+    def _call(self, *args):
+        key = signature(args)
+        fn = self._cache.get(key)
+        if fn is None:
+            self.cache_misses += 1
+            donate = (self._feats_argnum,) if self._donate else ()
+            fn = jax.jit(self._traced, donate_argnums=donate)
+            self._cache[key] = fn
+        else:
+            self.cache_hits += 1
+        return fn(*args)
+
+    @property
+    def num_compiled(self) -> int:
+        return len(self._cache)
+
+    def cache_stats(self) -> Dict[str, int]:
+        return {
+            "compile_cache_hits": self.cache_hits,
+            "compile_cache_misses": self.cache_misses,
+            "trace_count": self.trace_count,
+            "num_compiled": self.num_compiled,
+        }
+
+
+class PlanExecutor(_CachedExecutor):
+    """Compiled full-graph forward for one lowered plan.
+
+    ``gt``/``kl`` are arguments (not closure state), so one executor serves
+    any graph whose signature matches — and distinct graphs simply occupy
+    distinct cache entries.
+
+    Donation defaults off here: full-graph callers typically reuse the same
+    feature arrays across calls, so their buffers are not ours to consume
+    (unlike the per-batch gathered features of ``BlockExecutor``).
+    """
+
+    def __init__(self, plan, backend: str = "xla",
+                 donate_feats: bool = False):
+        super().__init__(donate_feats, feats_argnum=3)
+        self.plan = plan
+        self.backend = backend
+
+    def _traced(self, params, gt, kl, feats):
+        self.trace_count += 1
+        return codegen.execute_plan(self.plan, params, gt, feats, kl,
+                                    self.backend)
+
+    def __call__(self, params, gt, kl, feats) -> Dict[str, jnp.ndarray]:
+        return self._call(params, gt, kl, feats)
+
+
+class BlockExecutor(_CachedExecutor):
+    """Compiled sampled-minibatch forward for a stack of per-hop plans.
+
+    One jitted callable covers the *entire* block sequence — every hop's
+    GEMM/traversal kernels, inter-hop frontier narrowing, activations, and
+    the final seed gather — so steady-state serving is a single compiled
+    dispatch per batch.
+    """
+
+    def __init__(self, plans: Sequence, backend: str = "xla",
+                 activation: str = "relu", donate_feats: bool = True):
+        super().__init__(donate_feats, feats_argnum=5)
+        self.plans = list(plans)
+        self.backend = backend
+        self.activation = activation
+
+    def _traced(self, params, gts, kls, dst_locals, seed_perm, feats):
+        self.trace_count += 1
+        return codegen.execute_block_sequence(
+            self.plans, params, gts, kls, dst_locals, seed_perm, feats,
+            backend=self.backend, activation=self.activation)
+
+    def __call__(self, params: Sequence[Dict[str, jnp.ndarray]],
+                 gts: List, kls: List, dst_locals: List,
+                 seed_perm, feats: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return self._call(list(params), list(gts), list(kls),
+                          list(dst_locals), seed_perm, feats)
+
+    def run_minibatch(self, params, mb, global_feats) -> jnp.ndarray:
+        """Convenience entry over a ``sampling.MiniBatch``."""
+        feats = {"feature": global_feats[mb.input_ids]}
+        return self(params, mb.tensors, mb.layouts, mb.dst_locals,
+                    mb.seed_perm, feats)

@@ -9,13 +9,12 @@ Usage (the 51-lines-of-model-code experience of §4.1):
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import codegen
+from repro.core import codegen, executor
 from repro.core.graph import HeteroGraph
 from repro.core.ir import inter_op as I
 from repro.core.ir.passes import lower_program
@@ -46,30 +45,18 @@ class HectorModule:
             codegen.build_kernel_layouts(graph, tile=tile,
                                          node_block=node_block)
         self.backend = backend
-        self._apply = functools.partial(
-            codegen.execute_plan,
-            self.plan,
-            gt=self.gt,
-            kl=self.layouts,
-            backend=self.backend,
-        )
-        if jit:
-            self._apply_jit = jax.jit(
-                lambda params, feats: codegen.execute_plan(
-                    self.plan, params, self.gt, feats, self.layouts,
-                    self.backend,
-                )
-            )
-        else:
-            self._apply_jit = None
+        # whole-plan compiled executor: graph tensors and layouts flow in as
+        # pytree arguments, fronted by an explicit compile cache
+        self.executor = executor.PlanExecutor(self.plan, backend=backend) \
+            if jit else None
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
         return codegen.init_params(self.plan, self.gt, key, dtype)
 
     def apply(self, params, feats: Dict[str, jnp.ndarray]):
-        if self._apply_jit is not None:
-            return self._apply_jit(params, feats)
+        if self.executor is not None:
+            return self.executor(params, self.gt, self.layouts, feats)
         return codegen.execute_plan(
             self.plan, params, self.gt, feats, self.layouts, self.backend
         )
@@ -125,7 +112,13 @@ class HectorStack:
         ]
         self.activation = activation
         self.backend = backend
+        self.jit = jit
         self._act = codegen._ACTIVATIONS[activation]
+        # whole-plan compiled executor over the entire block sequence (all
+        # hops in one jitted callable, fronted by a compile cache keyed on
+        # the bucketed layout shapes) — the serving hot path
+        self.block_executor = executor.BlockExecutor(
+            self.plans, backend=backend, activation=activation)
 
     @property
     def num_layers(self) -> int:
@@ -153,13 +146,25 @@ class HectorStack:
         return h
 
     def apply_blocks(self, params: Sequence[Dict[str, jnp.ndarray]],
-                     mb, global_feats: jnp.ndarray) -> jnp.ndarray:
-        """Sampled forward over a ``MiniBatch``; returns [len(seeds), out]."""
+                     mb, global_feats: jnp.ndarray,
+                     compiled: Optional[bool] = None) -> jnp.ndarray:
+        """Sampled forward over a ``MiniBatch``; returns [len(seeds), out].
+
+        ``compiled=True`` runs the whole block sequence through the jitted
+        ``BlockExecutor`` (cache-hit on repeated bucketed shapes);
+        ``compiled=False`` is the op-by-op eager loop for debugging. The
+        default follows the stack's ``jit`` flag.
+        """
+        if compiled is None:
+            compiled = self.jit
         if mb.num_hops != self.num_layers:
             raise ValueError(
                 f"minibatch has {mb.num_hops} hops but the stack has "
                 f"{self.num_layers} layers"
             )
+        if compiled:
+            return self.block_executor.run_minibatch(
+                list(params), mb, global_feats)
         feats = {"feature": global_feats[mb.input_ids]}
         return codegen.execute_block_sequence(
             self.plans, list(params), mb.tensors, mb.layouts, mb.dst_locals,

@@ -78,6 +78,23 @@ def pow2ceil(x: int) -> int:
     return 1 << (max(1, int(x)) - 1).bit_length()
 
 
+def compose_gather_rows(ps: PaddedSegments, idx: np.ndarray) -> np.ndarray:
+    """Padded gather-index layout: compose a per-row gather list with the
+    tile-aligned padding map.
+
+    ``idx`` maps a canonical row (edge or unique pair) to the source row it
+    reads (e.g. ``src`` for BY_EDGE_SRC, ``unique_src`` for BY_UNIQUE_SRC).
+    The result maps each *padded* slot directly to that source row (-1 for
+    pad slots), so a kernel can scalar-prefetch it and perform the gather in
+    its own index space — no ``[rows, k]`` copy is materialized between the
+    source tensor and the GEMM (paper §3.3's in-kernel access schemes).
+    """
+    idx = np.asarray(idx)
+    return np.where(
+        ps.row_map >= 0, idx[np.maximum(ps.row_map, 0)], -1
+    ).astype(np.int32)
+
+
 def pad_segments_rows(ps: PaddedSegments, target_rows: int) -> PaddedSegments:
     """Grow a ``PaddedSegments`` layout to ``target_rows`` padded rows.
 

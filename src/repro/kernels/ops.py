@@ -13,13 +13,16 @@ Numerical contract: all paths match ``kernels/ref.py`` oracles.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+import jax.tree_util as jtu
 
+from repro import compat
 from repro.kernels import layout as L
 from repro.kernels import ref as R
 from repro.kernels import segment_mm as SK
@@ -29,9 +32,12 @@ Backend = str  # 'xla' | 'pallas' | 'pallas_interpret'
 
 
 # ---------------------------------------------------------------------------
-# device-side layout bundles
+# device-side layout bundles (pytrees: arrays are leaves, shape metadata is
+# static aux data, so whole layouts can flow through jit as arguments and
+# still parameterize the kernel factories with plain Python ints)
 # ---------------------------------------------------------------------------
-class PaddedSegmentsDev(NamedTuple):
+@dataclasses.dataclass(frozen=True, eq=False)
+class PaddedSegmentsDev:
     row_map: jnp.ndarray      # [Rp]
     inv_map: jnp.ndarray      # [M]
     t2g: jnp.ndarray          # [T]
@@ -39,14 +45,31 @@ class PaddedSegmentsDev(NamedTuple):
     num_groups: int
 
 
-class BlockedCSRDev(NamedTuple):
-    edge_map: jnp.ndarray     # [Ep] canonical edge index or -1
-    local_dst: jnp.ndarray    # [T, tile]
-    t2b: jnp.ndarray          # [T]
+jtu.register_pytree_node(
+    PaddedSegmentsDev,
+    lambda p: ((p.row_map, p.inv_map, p.t2g), (p.tile, p.num_groups)),
+    lambda aux, ch: PaddedSegmentsDev(*ch, *aux),
+)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BlockedCSRDev:
+    edge_map: jnp.ndarray         # [Ep] canonical edge index or -1
+    edge_map_unique: jnp.ndarray  # [Ep] compact (unique-pair) row or -1
+    local_dst: jnp.ndarray        # [T, tile]
+    t2b: jnp.ndarray              # [T]
     edge_tile: int
     node_block: int
     num_node_blocks: int
     num_nodes: int
+
+
+jtu.register_pytree_node(
+    BlockedCSRDev,
+    lambda b: ((b.edge_map, b.edge_map_unique, b.local_dst, b.t2b),
+               (b.edge_tile, b.node_block, b.num_node_blocks, b.num_nodes)),
+    lambda aux, ch: BlockedCSRDev(*ch, *aux),
+)
 
 
 def padded_segments_dev(ps: L.PaddedSegments) -> PaddedSegmentsDev:
@@ -59,14 +82,30 @@ def padded_segments_dev(ps: L.PaddedSegments) -> PaddedSegmentsDev:
     )
 
 
-def blocked_csr_dev(bc: L.BlockedCSR, perm_dst: np.ndarray) -> BlockedCSRDev:
-    """Compose dst-sorted edge_map with perm_dst -> canonical edge indices."""
+def blocked_csr_dev(
+    bc: L.BlockedCSR, perm_dst: np.ndarray,
+    edge_to_unique: Optional[np.ndarray] = None,
+) -> BlockedCSRDev:
+    """Compose dst-sorted edge_map with perm_dst -> canonical edge indices.
+
+    With ``edge_to_unique`` given, also precompute the slot -> compact-row
+    map (``edge_map_unique``), so traversal kernels can gather COMPACT-layout
+    messages straight from the unique-pair table in-kernel.
+    """
     edge_map = np.where(
         bc.edge_map >= 0, np.asarray(perm_dst)[np.maximum(bc.edge_map, 0)], -1
     ).astype(np.int32)
+    if edge_to_unique is None:
+        edge_map_u = edge_map
+    else:
+        e2u = np.asarray(edge_to_unique)
+        edge_map_u = np.where(
+            edge_map >= 0, e2u[np.maximum(edge_map, 0)], -1
+        ).astype(np.int32)
     t = bc.num_tiles
     return BlockedCSRDev(
         edge_map=jnp.asarray(edge_map),
+        edge_map_unique=jnp.asarray(edge_map_u),
         local_dst=jnp.asarray(bc.local_dst.reshape(t, bc.edge_tile)),
         t2b=jnp.asarray(bc.tile_to_block),
         edge_tile=bc.edge_tile,
@@ -74,6 +113,19 @@ def blocked_csr_dev(bc: L.BlockedCSR, perm_dst: np.ndarray) -> BlockedCSRDev:
         num_node_blocks=bc.num_node_blocks,
         num_nodes=bc.num_nodes,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class _Static:
+    """Wrap static metadata (e.g. shape tuples) riding inside custom_vjp
+    residuals: the payload lives in the pytree *treedef*, so it stays a
+    plain Python value under jit instead of becoming a traced leaf."""
+
+    value: tuple
+
+
+jtu.register_pytree_node(
+    _Static, lambda s: ((), s.value), lambda aux, _: _Static(aux))
 
 
 def pad_rows(x: jnp.ndarray, row_map: jnp.ndarray,
@@ -101,6 +153,13 @@ def _segment_mm_xla_padded(x_p, w, t2g, scale_p, tile):
     return y
 
 
+def _fit_tile_n(n: int, tile_n: int) -> int:
+    """Largest usable column tile: ``tile_n`` capped at ``n``, falling back
+    to ``n`` itself when it does not divide evenly."""
+    tn = min(tile_n, n)
+    return n if n % tn else tn
+
+
 @functools.lru_cache(maxsize=None)
 def _make_pallas_segment_mm(tile_rows: int, tile_n: int, num_groups: int,
                             with_scale: bool, interpret: bool):
@@ -123,7 +182,7 @@ def _make_pallas_segment_mm(tile_rows: int, tile_n: int, num_groups: int,
         w_t = jnp.swapaxes(w, 1, 2)
         dx = SK.segment_mm_padded(
             dys, w_t, t2g, None,
-            tile_rows=tile_rows, tile_n=min(tile_n, w.shape[1]),
+            tile_rows=tile_rows, tile_n=_fit_tile_n(w.shape[1], tile_n),
             interpret=interpret,
         )
         dw = SK.segment_outer_padded(
@@ -132,8 +191,8 @@ def _make_pallas_segment_mm(tile_rows: int, tile_n: int, num_groups: int,
         )
         # groups with zero rows own no tiles -> their dW block is never
         # visited (uninitialized); mask them to exact zeros.
-        present = jax.ops.segment_sum(
-            jnp.ones_like(t2g), t2g, num_segments=num_groups
+        present = compat.segment_sum(
+            jnp.ones_like(t2g), t2g, num_groups
         ) > 0
         dw = jnp.where(present[:, None, None], dw, 0.0).astype(w.dtype)
         if with_scale:
@@ -167,10 +226,7 @@ def segment_mm(
         y_p = _segment_mm_xla_padded(x_p, w, lay.t2g, scale_p, lay.tile)
     else:
         interpret = backend == "pallas_interpret"
-        n = w.shape[-1]
-        tn = n if n % min(tile_n, n) else min(tile_n, n)
-        if n % tn:
-            tn = n
+        tn = _fit_tile_n(w.shape[-1], tile_n)
         f = _make_pallas_segment_mm(lay.tile, tn, lay.num_groups,
                                     scale_p is not None, interpret)
         if scale_p is None:
@@ -190,6 +246,103 @@ def gather_mm(
     """Full GEMM template: Y = X[G] @ W[T] (+ scale). Gather runs as an XLA
     fused gather feeding the kernel (TPU adaptation, DESIGN.md §3)."""
     return segment_mm(feats[gather_idx], w, lay, row_scale, backend)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_pallas_segment_mm_gather(tile_rows: int, tile_n: int,
+                                   num_groups: int, with_scale: bool,
+                                   interpret: bool):
+    kw = dict(tile_rows=tile_rows, tile_n=tile_n, interpret=interpret)
+
+    @jax.custom_vjp
+    def f(x, w, scale_p, gidx, t2g):
+        return SK.segment_mm_gather_padded(
+            x, w, gidx, t2g, scale_p if with_scale else None, **kw)
+
+    def fwd(x, w, scale_p, gidx, t2g):
+        y_pre = SK.segment_mm_gather_padded(x, w, gidx, t2g, None, **kw)
+        y = y_pre * scale_p if with_scale else y_pre
+        return y, (x, w, scale_p, gidx, t2g, y_pre)
+
+    def bwd(res, dy):
+        x, w, scale_p, gidx, t2g, y_pre = res
+        dys = dy * scale_p if with_scale else dy
+        w_t = jnp.swapaxes(w, 1, 2)
+        # template-derived backward: a GEMM instance over padded dY rows,
+        # then the gather access scheme transposes into a scatter-add that
+        # routes each padded row's gradient back to its source row.
+        dxg = SK.segment_mm_padded(
+            dys, w_t, t2g, None,
+            tile_rows=tile_rows, tile_n=_fit_tile_n(w.shape[1], tile_n),
+            interpret=interpret,
+        )
+        valid = gidx >= 0
+        dx = jnp.zeros_like(x).at[jnp.where(valid, gidx, 0)].add(
+            jnp.where(valid[:, None], dxg, 0.0).astype(x.dtype))
+        # dW needs X in padded-row order; materialized here only, i.e. only
+        # on the training path — the forward/serving path never builds it.
+        x_p = jnp.where(valid[:, None], x[jnp.maximum(gidx, 0)], 0)
+        dw = SK.segment_outer_padded(
+            x_p, dys, t2g, num_groups=num_groups, tile_rows=tile_rows,
+            interpret=interpret,
+        )
+        present = compat.segment_sum(jnp.ones_like(t2g), t2g, num_groups) > 0
+        dw = jnp.where(present[:, None, None], dw, 0.0).astype(w.dtype)
+        if with_scale:
+            dscale = jnp.sum(dy * y_pre, axis=1,
+                             keepdims=True).astype(scale_p.dtype)
+        else:
+            dscale = jnp.zeros_like(scale_p)
+        f0 = jax.dtypes.float0
+        return (dx, dw, dscale, np.zeros(gidx.shape, f0),
+                np.zeros(t2g.shape, f0))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def segment_mm_gather(
+    x_src: jnp.ndarray,                     # [Nx, k] ungathered source rows
+    w: jnp.ndarray,                         # [R, k, n]
+    lay: PaddedSegmentsDev,
+    gather_rows: jnp.ndarray,               # [Rp] slot -> source row, or -1
+    row_scale: Optional[jnp.ndarray] = None,  # [M] canonical per-row scale
+    backend: Backend = "xla",
+    tile_n: int = 128,
+) -> jnp.ndarray:
+    """Y = X[G] @ W[type] with the gather folded into the kernel. -> [M, n].
+
+    ``gather_rows`` is the padded gather-index layout
+    (``layout.compose_gather_rows``): it composes the access-scheme gather
+    list (edge src / edge dst / unique src) with the tile padding map, so on
+    the Pallas backends the ``[M, k]``/``[Rp, k]`` input copy that
+    ``gather_mm`` materializes never exists — each kernel grid step reads
+    its rows straight out of the VMEM-resident source block. The XLA
+    backend keeps the materialized formulation (XLA fuses the gather
+    itself).
+    """
+    n = w.shape[-1]
+    m = int(lay.inv_map.shape[0])
+    if m == 0:
+        # empty block (e.g. a sampled hop with no edges): no tiles to sweep
+        return jnp.zeros((0, n), x_src.dtype)
+    scale_p = None
+    if row_scale is not None:
+        scale_p = pad_rows(row_scale, lay.row_map)[:, None]
+    if backend == "xla":
+        valid = gather_rows >= 0
+        x_p = jnp.where(valid[:, None],
+                        x_src[jnp.maximum(gather_rows, 0)], 0)
+        y_p = _segment_mm_xla_padded(x_p, w, lay.t2g, scale_p, lay.tile)
+    else:
+        interpret = backend == "pallas_interpret"
+        tn = _fit_tile_n(n, tile_n)
+        f = _make_pallas_segment_mm_gather(lay.tile, tn, lay.num_groups,
+                                           scale_p is not None, interpret)
+        if scale_p is None:
+            scale_p = jnp.ones((gather_rows.shape[0], 1), x_src.dtype)
+        y_p = f(x_src, w, scale_p, gather_rows, lay.t2g)
+    return y_p[lay.inv_map]
 
 
 # ---------------------------------------------------------------------------
@@ -226,53 +379,142 @@ def _make_pallas_softmax_agg(node_block: int, num_node_blocks: int,
         )
         return out[:num_nodes]
 
-    res_shapes = {}
-
     def fwd(scores, msg, dst, bc_edge_map, bc_local_dst, bc_t2b):
-        res_shapes["edge_map"] = bc_edge_map.shape
-        res_shapes["local_dst"] = bc_local_dst.shape
-        res_shapes["t2b"] = bc_t2b.shape
+        shapes = _Static((bc_edge_map.shape, bc_local_dst.shape,
+                          bc_t2b.shape))
         out = f(scores, msg, dst, bc_edge_map, bc_local_dst, bc_t2b)
         att = R.edge_softmax_ref(scores, dst, num_nodes)
-        return out, (att, msg, dst)
+        return out, (att, msg, dst, shapes)
 
     def bwd_full(res, dout):
-        att, msg, dst = res
+        att, msg, dst, shapes = res
         g = dout[dst]
         dmsg = (att[:, None] * g).astype(msg.dtype)
         datt = jnp.sum(msg * g, axis=-1)
-        c = jax.ops.segment_sum(att * datt, dst, num_segments=num_nodes)
+        c = compat.segment_sum(att * datt, dst, num_nodes)
         dscores = (att * (datt - c[dst])).astype(att.dtype)
         f0 = jax.dtypes.float0
+        em, ld, tb = shapes.value
         return (
             dscores, dmsg,
             np.zeros(dst.shape, dtype=f0),
-            np.zeros(res_shapes["edge_map"], dtype=f0),
-            np.zeros(res_shapes["local_dst"], dtype=f0),
-            np.zeros(res_shapes["t2b"], dtype=f0),
+            np.zeros(em, dtype=f0),
+            np.zeros(ld, dtype=f0),
+            np.zeros(tb, dtype=f0),
         )
 
     f.defvjp(fwd, bwd_full)
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _make_pallas_softmax_agg_gather(node_block: int, num_node_blocks: int,
+                                    num_nodes: int, identity_rows: bool,
+                                    interpret: bool):
+    """``identity_rows=True`` specializes for canonical-order messages:
+    the backward computes dmsg directly instead of an identity
+    gather/scatter pair."""
+    kw = dict(node_block=node_block, num_node_blocks=num_node_blocks,
+              interpret=interpret)
+
+    @jax.custom_vjp
+    def f(scores, msg, dst, msg_rows, bc_edge_map, mmap, bc_local_dst,
+          bc_t2b):
+        # scores are 1-D scalars: padding them stays outside the kernel
+        # (cheap); the feature-wide message gather moves inside it.
+        scores_p = jnp.where(
+            bc_edge_map >= 0, scores[jnp.maximum(bc_edge_map, 0)],
+            TK._NEG_INF,
+        ).reshape(-1, bc_local_dst.shape[-1])
+        mx, den = TK.seg_stats_padded(scores_p, bc_local_dst, bc_t2b, **kw)
+        out = TK.seg_softmax_agg_gather_padded(
+            scores_p, msg, mmap, bc_local_dst, bc_t2b, mx, den, **kw
+        )
+        return out[:num_nodes]
+
+    def fwd(scores, msg, dst, msg_rows, bc_edge_map, mmap, bc_local_dst,
+            bc_t2b):
+        shapes = _Static((msg_rows.shape, bc_edge_map.shape, mmap.shape,
+                          bc_local_dst.shape, bc_t2b.shape))
+        out = f(scores, msg, dst, msg_rows, bc_edge_map, mmap,
+                bc_local_dst, bc_t2b)
+        att = R.edge_softmax_ref(scores, dst, num_nodes)
+        return out, (att, msg, dst, msg_rows, shapes)
+
+    def bwd(res, dout):
+        att, msg, dst, msg_rows, shapes = res
+        g = dout[dst]                                # [E, d]
+        contrib = (att[:, None] * g).astype(msg.dtype)
+        if identity_rows:
+            msg_e = msg
+            dmsg = contrib
+        else:                                        # training path only
+            msg_e = jnp.take(msg, msg_rows, axis=0)
+            dmsg = jnp.zeros_like(msg).at[msg_rows].add(contrib)
+        datt = jnp.sum(msg_e * g, axis=-1)
+        c = compat.segment_sum(att * datt, dst, num_nodes)
+        dscores = (att * (datt - c[dst])).astype(att.dtype)
+        f0 = jax.dtypes.float0
+        mr, em, mm, ld, tb = shapes.value
+        return (dscores, dmsg,
+                np.zeros(dst.shape, f0), np.zeros(mr, f0),
+                np.zeros(em, f0), np.zeros(mm, f0),
+                np.zeros(ld, f0), np.zeros(tb, f0))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _msg_slot_map(bc: BlockedCSRDev,
+                  msg_rows: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Padded slot -> message-row map for in-kernel message gathers."""
+    if msg_rows is None:
+        return bc.edge_map
+    return jnp.where(
+        bc.edge_map >= 0, msg_rows[jnp.maximum(bc.edge_map, 0)], -1)
+
+
 def edge_softmax_agg(
     scores: jnp.ndarray,        # [E] canonical order
-    msg: jnp.ndarray,           # [E, d] canonical order
+    msg: jnp.ndarray,           # [Em, d] in storage order (see msg_rows)
     dst: jnp.ndarray,           # [E] canonical destination ids
     num_nodes: int,
     bc: Optional[BlockedCSRDev] = None,
     backend: Backend = "xla",
+    msg_rows: Optional[jnp.ndarray] = None,   # [E] edge -> msg row, or None
+    msg_slot_map: Optional[jnp.ndarray] = None,  # [Ep] precomposed slot map
+    fuse_gather: bool = True,
 ) -> jnp.ndarray:
-    """out[v] = Σ_{e→v} softmax(scores)_e · msg_e — the fused traversal region."""
-    if msg.shape[0] == 0:
+    """out[v] = Σ_{e→v} softmax(scores)_e · msg_e — the fused traversal region.
+
+    ``msg_rows`` lets messages live in a compact storage (e.g. the unique
+    (src, etype) table with ``edge_to_unique`` as the map); with
+    ``fuse_gather`` (Pallas backends) the per-edge message gather happens
+    inside the kernel via the slot map, so no dst-sorted ``[Ep, d]`` copy is
+    materialized. ``fuse_gather=False`` keeps the materialized-gather kernel
+    (equivalence baseline).
+    """
+    if dst.shape[0] == 0:
         return jnp.zeros((num_nodes, msg.shape[-1]), msg.dtype)
     if backend == "xla" or bc is None:
-        return R.softmax_agg_ref(scores, msg, dst, num_nodes)
+        msg_e = msg if msg_rows is None else msg[msg_rows]
+        return R.softmax_agg_ref(scores, msg_e, dst, num_nodes)
     interpret = backend == "pallas_interpret"
+    if fuse_gather:
+        rows = (msg_rows if msg_rows is not None
+                else jnp.arange(dst.shape[0], dtype=jnp.int32))
+        if msg_slot_map is None:
+            msg_slot_map = _msg_slot_map(bc, msg_rows)
+        f = _make_pallas_softmax_agg_gather(bc.node_block,
+                                            bc.num_node_blocks,
+                                            num_nodes, msg_rows is None,
+                                            interpret)
+        return f(scores, msg, dst, rows, bc.edge_map, msg_slot_map,
+                 bc.local_dst, bc.t2b)
+    msg_e = msg if msg_rows is None else msg[msg_rows]
     f = _make_pallas_softmax_agg(bc.node_block, bc.num_node_blocks,
                                  num_nodes, interpret)
-    return f(scores, msg, dst, bc.edge_map, bc.local_dst, bc.t2b)
+    return f(scores, msg_e, dst, bc.edge_map, bc.local_dst, bc.t2b)
 
 
 @functools.lru_cache(maxsize=None)
@@ -294,20 +536,19 @@ def _make_pallas_weighted_agg(node_block: int, num_node_blocks: int,
                                          bc_t2b, **kw)
         return out[:num_nodes]
 
-    shapes = {}
-
     def fwd(scale, msg, dst, bc_edge_map, bc_local_dst, bc_t2b):
-        shapes["m"] = (bc_edge_map.shape, bc_local_dst.shape, bc_t2b.shape)
+        shapes = _Static((bc_edge_map.shape, bc_local_dst.shape,
+                          bc_t2b.shape))
         out = f(scale, msg, dst, bc_edge_map, bc_local_dst, bc_t2b)
-        return out, (scale, msg, dst)
+        return out, (scale, msg, dst, shapes)
 
     def bwd(res, dout):
-        scale, msg, dst = res
+        scale, msg, dst, shapes = res
         g = dout[dst]
         dmsg = (scale[:, None] * g).astype(msg.dtype)
         dscale = jnp.sum(msg * g, axis=-1).astype(scale.dtype)
         f0 = jax.dtypes.float0
-        em, ld, tb = shapes["m"]
+        em, ld, tb = shapes.value
         return (dscale, dmsg, np.zeros(dst.shape, f0),
                 np.zeros(em, f0), np.zeros(ld, f0), np.zeros(tb, f0))
 
@@ -315,25 +556,88 @@ def _make_pallas_weighted_agg(node_block: int, num_node_blocks: int,
     return f
 
 
+@functools.lru_cache(maxsize=None)
+def _make_pallas_weighted_agg_gather(node_block: int, num_node_blocks: int,
+                                     num_nodes: int, identity_rows: bool,
+                                     interpret: bool):
+    kw = dict(node_block=node_block, num_node_blocks=num_node_blocks,
+              interpret=interpret)
+
+    @jax.custom_vjp
+    def f(scale, msg, dst, msg_rows, bc_edge_map, mmap, bc_local_dst,
+          bc_t2b):
+        scale_p = jnp.where(
+            bc_edge_map >= 0, scale[jnp.maximum(bc_edge_map, 0)], 0.0
+        ).reshape(-1, bc_local_dst.shape[-1])
+        out = TK.seg_weighted_agg_gather_padded(
+            scale_p, msg, mmap, bc_local_dst, bc_t2b, **kw)
+        return out[:num_nodes]
+
+    def fwd(scale, msg, dst, msg_rows, bc_edge_map, mmap, bc_local_dst,
+            bc_t2b):
+        shapes = _Static((msg_rows.shape, bc_edge_map.shape, mmap.shape,
+                          bc_local_dst.shape, bc_t2b.shape))
+        out = f(scale, msg, dst, msg_rows, bc_edge_map, mmap, bc_local_dst,
+                bc_t2b)
+        return out, (scale, msg, dst, msg_rows, shapes)
+
+    def bwd(res, dout):
+        scale, msg, dst, msg_rows, shapes = res
+        g = dout[dst]
+        contrib = (scale[:, None] * g).astype(msg.dtype)
+        if identity_rows:
+            msg_e = msg
+            dmsg = contrib
+        else:                                        # training path only
+            msg_e = jnp.take(msg, msg_rows, axis=0)
+            dmsg = jnp.zeros_like(msg).at[msg_rows].add(contrib)
+        dscale = jnp.sum(msg_e * g, axis=-1).astype(scale.dtype)
+        f0 = jax.dtypes.float0
+        mr, em, mm, ld, tb = shapes.value
+        return (dscale, dmsg,
+                np.zeros(dst.shape, f0), np.zeros(mr, f0),
+                np.zeros(em, f0), np.zeros(mm, f0),
+                np.zeros(ld, f0), np.zeros(tb, f0))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
 def weighted_agg(
     scale: Optional[jnp.ndarray],   # [E] or None
-    msg: jnp.ndarray,               # [E, d]
+    msg: jnp.ndarray,               # [Em, d] in storage order (see msg_rows)
     dst: jnp.ndarray,
     num_nodes: int,
     bc: Optional[BlockedCSRDev] = None,
     backend: Backend = "xla",
+    msg_rows: Optional[jnp.ndarray] = None,
+    msg_slot_map: Optional[jnp.ndarray] = None,
+    fuse_gather: bool = True,
 ) -> jnp.ndarray:
-    """out[v] = Σ_{e→v} scale_e · msg_e."""
-    if msg.shape[0] == 0:
+    """out[v] = Σ_{e→v} scale_e · msg_e (gather semantics as edge_softmax_agg)."""
+    if dst.shape[0] == 0:
         return jnp.zeros((num_nodes, msg.shape[-1]), msg.dtype)
     if backend == "xla" or bc is None:
-        return R.weighted_agg_ref(scale, msg, dst, num_nodes)
+        msg_e = msg if msg_rows is None else msg[msg_rows]
+        return R.weighted_agg_ref(scale, msg_e, dst, num_nodes)
     if scale is None:
-        scale = jnp.ones(msg.shape[0], msg.dtype)
+        scale = jnp.ones(dst.shape[0], msg.dtype)
     interpret = backend == "pallas_interpret"
+    if fuse_gather:
+        rows = (msg_rows if msg_rows is not None
+                else jnp.arange(dst.shape[0], dtype=jnp.int32))
+        if msg_slot_map is None:
+            msg_slot_map = _msg_slot_map(bc, msg_rows)
+        f = _make_pallas_weighted_agg_gather(bc.node_block,
+                                             bc.num_node_blocks,
+                                             num_nodes, msg_rows is None,
+                                             interpret)
+        return f(scale, msg, dst, rows, bc.edge_map, msg_slot_map,
+                 bc.local_dst, bc.t2b)
+    msg_e = msg if msg_rows is None else msg[msg_rows]
     f = _make_pallas_weighted_agg(bc.node_block, bc.num_node_blocks,
                                   num_nodes, interpret)
-    return f(scale, msg, dst, bc.edge_map, bc.local_dst, bc.t2b)
+    return f(scale, msg_e, dst, bc.edge_map, bc.local_dst, bc.t2b)
 
 
 def edge_softmax(scores: jnp.ndarray, dst: jnp.ndarray,

@@ -1,13 +1,14 @@
 """Pure-jnp oracles for every Pallas kernel (correctness references).
 
-These are deliberately simple (per-row weight gather, jax.ops.segment_*) and
+These are deliberately simple (per-row weight gather, compat.segment_*) and
 O(E·d·f) regardless of layout — the kernels must match them bit-for-bit in
 f32 (tolerance for bf16).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from repro import compat
 
 
 def segment_mm_ref(x: jnp.ndarray, w: jnp.ndarray, seg_ids: jnp.ndarray,
@@ -32,10 +33,10 @@ def gather_mm_ref(feats: jnp.ndarray, w: jnp.ndarray, gather_idx: jnp.ndarray,
 def segment_softmax_stats_ref(scores: jnp.ndarray, dst: jnp.ndarray,
                               num_nodes: int):
     """Per-destination max and sum-exp (the stabilized edge-softmax stats)."""
-    mx = jax.ops.segment_max(scores, dst, num_segments=num_nodes)
+    mx = compat.segment_max(scores, dst, num_nodes)
     mx = jnp.where(jnp.isfinite(mx), mx, 0.0)  # nodes with no incoming edges
-    den = jax.ops.segment_sum(jnp.exp(scores - mx[dst]), dst,
-                              num_segments=num_nodes)
+    den = compat.segment_sum(jnp.exp(scores - mx[dst]), dst,
+                             num_nodes)
     return mx, den
 
 
@@ -48,11 +49,11 @@ def softmax_agg_ref(scores: jnp.ndarray, msg: jnp.ndarray, dst: jnp.ndarray,
                     num_nodes: int) -> jnp.ndarray:
     """out[v] = sum_{e: dst(e)=v} softmax(scores)_e * msg[e]."""
     att = edge_softmax_ref(scores, dst, num_nodes)
-    return jax.ops.segment_sum(att[:, None] * msg, dst, num_segments=num_nodes)
+    return compat.segment_sum(att[:, None] * msg, dst, num_nodes)
 
 
 def weighted_agg_ref(scale: jnp.ndarray | None, msg: jnp.ndarray,
                      dst: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
     """out[v] = sum_{e: dst(e)=v} scale_e * msg[e] (plain traversal agg)."""
     contrib = msg if scale is None else scale[:, None] * msg
-    return jax.ops.segment_sum(contrib, dst, num_segments=num_nodes)
+    return compat.segment_sum(contrib, dst, num_nodes)

@@ -84,6 +84,95 @@ def segment_mm_padded(
     )(t2g, *args)
 
 
+def _mm_gather_tile(gidx_ref, x_ref, tile_rows):
+    """Gather this grid step's row tile from the resident source block.
+
+    ``gidx_ref`` is the scalar-prefetched padded gather-index layout
+    (kernels/layout.py ``compose_gather_rows``): slot -> source row or -1.
+    The gather happens here, inside the kernel, against the full source
+    block in VMEM — the TPU analogue of the paper's per-element gather
+    access scheme folded into the GEMM template.
+    """
+    t = pl.program_id(0)
+    rows = gidx_ref[pl.ds(t * tile_rows, tile_rows)]
+    valid = rows >= 0
+    xt = jnp.take(x_ref[...], jnp.where(valid, rows, 0), axis=0)
+    return jnp.where(valid[:, None], xt, 0.0).astype(x_ref.dtype)
+
+
+def _mm_gather_kernel(gidx_ref, t2g_ref, x_ref, w_ref, y_ref, *, tile_rows):
+    xt = _mm_gather_tile(gidx_ref, x_ref, tile_rows)
+    acc = jnp.dot(xt, w_ref[0], preferred_element_type=jnp.float32)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+def _mm_gather_scale_kernel(gidx_ref, t2g_ref, x_ref, w_ref, scale_ref, y_ref,
+                            *, tile_rows):
+    xt = _mm_gather_tile(gidx_ref, x_ref, tile_rows)
+    acc = jnp.dot(xt, w_ref[0], preferred_element_type=jnp.float32)
+    acc = acc * scale_ref[...].astype(jnp.float32)
+    y_ref[...] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_rows", "tile_n", "interpret")
+)
+def segment_mm_gather_padded(
+    x: jnp.ndarray,            # [Nx, k]  source rows (node feats / uniques)
+    w: jnp.ndarray,            # [R, k, n]
+    gidx: jnp.ndarray,         # [Rp] int32 padded slot -> source row, or -1
+    t2g: jnp.ndarray,          # [T] int32, non-decreasing tile -> group
+    row_scale_p: jnp.ndarray | None = None,   # [Rp, 1] fused epilogue scale
+    *,
+    tile_rows: int = 128,
+    tile_n: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather-fused GEMM template: Y_p = X[gidx] @ W[T[tile]].
+
+    Unlike ``segment_mm_padded`` the caller hands over the *ungathered*
+    source tensor; the per-row gather runs inside the kernel from the
+    scalar-prefetched index layout, so no ``[Rp, k]`` (edge-wide) input copy
+    is ever materialized in HBM. The source block stays resident in VMEM
+    across grid steps (its index_map is constant).
+    """
+    nx, k = x.shape
+    r, k2, n = w.shape
+    assert k == k2, (k, k2)
+    (rp,) = gidx.shape
+    assert rp % tile_rows == 0, (rp, tile_rows)
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0, (n, tile_n)
+    num_tiles = rp // tile_rows
+    grid = (num_tiles, n // tile_n)
+
+    in_specs = [
+        pl.BlockSpec((nx, k), lambda i, j, gidx, t2g: (0, 0)),
+        pl.BlockSpec((1, k, tile_n), lambda i, j, gidx, t2g: (t2g[i], 0, j)),
+    ]
+    args = [x, w]
+    kernel = functools.partial(_mm_gather_kernel, tile_rows=tile_rows)
+    if row_scale_p is not None:
+        in_specs.append(
+            pl.BlockSpec((tile_rows, 1), lambda i, j, gidx, t2g: (i, 0)))
+        args.append(row_scale_p.reshape(rp, 1))
+        kernel = functools.partial(_mm_gather_scale_kernel,
+                                   tile_rows=tile_rows)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((tile_rows, tile_n),
+                                   lambda i, j, gidx, t2g: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((rp, n), x.dtype),
+        interpret=interpret,
+    )(gidx, t2g, *args)
+
+
 def _outer_kernel(meta_ref, x_ref, dy_ref, dw_ref):
     """Accumulating outer product; meta_ref[0] = t2g, meta_ref[1] = is_first."""
     t = pl.program_id(0)

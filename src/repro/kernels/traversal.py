@@ -19,6 +19,15 @@ Kernels (all derived traversal-template instances):
 
 The scatter "one-hot × message" contraction maps the per-edge scatter onto
 the MXU (a [node_block × tile] one-hot matmul) instead of per-element stores.
+
+``*_gather_padded`` variants additionally fold the message gather into the
+kernel: instead of materializing the padded dst-sorted ``[Ep, d]`` message
+copy in HBM before the call, the caller passes messages in their storage
+order (canonical edge order, or the compact unique-pair table) plus a
+scalar-prefetched padded row-index map (slot -> message row, -1 for pads);
+each grid step gathers its tile from the VMEM-resident message block —
+the paper's in-kernel gather access scheme applied to the traversal
+template.
 """
 from __future__ import annotations
 
@@ -167,6 +176,156 @@ def seg_softmax_agg_padded(
                                        msg_p.dtype),
         interpret=interpret,
     )(meta, scores_p, local_dst_p, msg_p, mx, den)
+
+
+def _gather_msg_tile(mmap_ref, msg_ref, tile):
+    """In-kernel message gather: this grid step's tile of rows from the
+    VMEM-resident message block, via the scalar-prefetched slot -> row map
+    (-1 slots produce zero rows)."""
+    t = pl.program_id(0)
+    rows = mmap_ref[pl.ds(t * tile, tile)]
+    valid = rows >= 0
+    mt = jnp.take(msg_ref[...], jnp.where(valid, rows, 0), axis=0)
+    return jnp.where(valid[:, None], mt.astype(jnp.float32), 0.0)
+
+
+def _softmax_agg_gather_kernel(mmap_ref, meta_ref, scores_ref, dst_ref,
+                               msg_ref, mx_ref, den_ref, out_ref, *,
+                               node_block):
+    t = pl.program_id(0)
+    is_first = meta_ref[1, t]
+
+    @pl.when(is_first == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    s = scores_ref[0, :].astype(jnp.float32)          # [tile]
+    dst = dst_ref[0, :]                               # [tile]
+    tile = s.shape[0]
+    valid = dst < node_block
+    dst_c = jnp.where(valid, dst, 0)
+    mx = mx_ref[0, :]
+    den = den_ref[0, :]
+    att = jnp.exp(s - mx[dst_c]) / jnp.maximum(den[dst_c], 1e-38)
+    att = jnp.where(valid, att, 0.0)                  # [tile]
+
+    msg_t = _gather_msg_tile(mmap_ref, msg_ref, tile)  # [tile, d]
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (node_block, tile), 0)
+    onehot = (node_ids == dst[None, :]).astype(jnp.float32)
+    contrib = jax.lax.dot(
+        onehot, att[:, None] * msg_t, preferred_element_type=jnp.float32,
+    )                                                 # [NB, d]
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("node_block", "num_node_blocks", "interpret")
+)
+def seg_softmax_agg_gather_padded(
+    scores_p: jnp.ndarray,     # [T, tile] dst-sorted padded scores
+    msg: jnp.ndarray,          # [Em, d]  messages in storage order
+    mmap: jnp.ndarray,         # [T*tile] int32 slot -> message row, or -1
+    local_dst_p: jnp.ndarray,  # [T, tile]
+    t2b: jnp.ndarray,          # [T]
+    mx: jnp.ndarray,           # [NBk, NB]  from seg_stats_padded
+    den: jnp.ndarray,          # [NBk, NB]
+    *,
+    node_block: int,
+    num_node_blocks: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather-fused fused-softmax aggregation: messages are gathered inside
+    the kernel from their storage-order block (canonical edges or the
+    compact unique table), never materialized per padded slot in HBM."""
+    num_tiles, tile = scores_p.shape
+    em, d = msg.shape
+    prev = jnp.concatenate([jnp.array([-1], jnp.int32), t2b[:-1]])
+    meta = jnp.stack([t2b.astype(jnp.int32), (t2b != prev).astype(jnp.int32)])
+
+    return pl.pallas_call(
+        functools.partial(_softmax_agg_gather_kernel, node_block=node_block),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(num_tiles,),
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda t, mmap, meta: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t, mmap, meta: (t, 0)),
+                pl.BlockSpec((em, d), lambda t, mmap, meta: (0, 0)),
+                pl.BlockSpec((1, node_block),
+                             lambda t, mmap, meta: (meta[0, t], 0)),
+                pl.BlockSpec((1, node_block),
+                             lambda t, mmap, meta: (meta[0, t], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (node_block, d), lambda t, mmap, meta: (meta[0, t], 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_node_blocks * node_block, d),
+                                       msg.dtype),
+        interpret=interpret,
+    )(mmap, meta, scores_p, local_dst_p, msg, mx, den)
+
+
+def _weighted_agg_gather_kernel(mmap_ref, meta_ref, scale_ref, dst_ref,
+                                msg_ref, out_ref, *, node_block):
+    t = pl.program_id(0)
+    is_first = meta_ref[1, t]
+
+    @pl.when(is_first == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dst = dst_ref[0, :]
+    tile = dst.shape[0]
+    valid = dst < node_block
+    scale = jnp.where(valid, scale_ref[0, :].astype(jnp.float32), 0.0)
+    msg_t = _gather_msg_tile(mmap_ref, msg_ref, tile)
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (node_block, tile), 0)
+    onehot = (node_ids == dst[None, :]).astype(jnp.float32)
+    contrib = jax.lax.dot(
+        onehot, scale[:, None] * msg_t, preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += contrib.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("node_block", "num_node_blocks", "interpret")
+)
+def seg_weighted_agg_gather_padded(
+    scale_p: jnp.ndarray,      # [T, tile] per-edge scalar (pads: 0)
+    msg: jnp.ndarray,          # [Em, d]  messages in storage order
+    mmap: jnp.ndarray,         # [T*tile] int32 slot -> message row, or -1
+    local_dst_p: jnp.ndarray,  # [T, tile]
+    t2b: jnp.ndarray,          # [T]
+    *,
+    node_block: int,
+    num_node_blocks: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather-fused weighted aggregation (RGCN-style sum/mean numerator)."""
+    num_tiles, tile = scale_p.shape
+    em, d = msg.shape
+    prev = jnp.concatenate([jnp.array([-1], jnp.int32), t2b[:-1]])
+    meta = jnp.stack([t2b.astype(jnp.int32), (t2b != prev).astype(jnp.int32)])
+
+    return pl.pallas_call(
+        functools.partial(_weighted_agg_gather_kernel, node_block=node_block),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(num_tiles,),
+            in_specs=[
+                pl.BlockSpec((1, tile), lambda t, mmap, meta: (t, 0)),
+                pl.BlockSpec((1, tile), lambda t, mmap, meta: (t, 0)),
+                pl.BlockSpec((em, d), lambda t, mmap, meta: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (node_block, d), lambda t, mmap, meta: (meta[0, t], 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_node_blocks * node_block, d),
+                                       msg.dtype),
+        interpret=interpret,
+    )(mmap, meta, scale_p, local_dst_p, msg)
 
 
 def _weighted_agg_kernel(meta_ref, scale_ref, dst_ref, msg_ref, out_ref, *,

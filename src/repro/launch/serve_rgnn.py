@@ -2,14 +2,20 @@
 
 Request batches of seed nodes stream through the fanout sampler (prefetched
 on a background thread, kernel layouts built off the accelerator path), and
-a multi-layer Hector stack runs one generated layer per sampled hop,
-returning per-seed logits. Reports per-batch latency split into queue-wait
-(sampling + layout, when not hidden by prefetch) and model compute, plus
-end-to-end seed throughput.
+a multi-layer Hector stack runs one generated layer per sampled hop through
+the whole-plan compiled ``BlockExecutor``, returning per-seed logits.
+Reports per-batch latency split into queue-wait (sampling + layout, when not
+hidden by prefetch) and model compute, end-to-end seed throughput, and —
+when the caches are enabled — sampled-block / layout cache hit rates plus
+compiled-executor trace counts (``retraces_after_warmup`` pins the
+steady-state zero-retrace invariant).
 
     PYTHONPATH=src python -m repro.launch.serve_rgnn --model rgat --reduced
     PYTHONPATH=src python -m repro.launch.serve_rgnn \
         --model hgt --dataset mutag --fanout 5,10 --batch-size 64
+    # power-law repeat traffic over 4 distinct batches, all caches on:
+    PYTHONPATH=src python -m repro.launch.serve_rgnn --repeat-after 4 \
+        --cache-blocks 64 --cache-layouts 256
 """
 from __future__ import annotations
 
@@ -58,12 +64,26 @@ def serve(
     bucket: bool = True,
     seed: int = 0,
     prefetch_depth: int = 2,
+    cache_blocks: int = 0,
+    cache_layouts: int = 0,
+    repeat_after=None,
+    compiled: bool = True,
+    warmup_batches=None,
     log=print,
 ):
-    """Run the serving loop; returns a stats dict (used by tests/benchmarks)."""
+    """Run the serving loop; returns a stats dict (used by tests/benchmarks).
+
+    ``repeat_after`` wraps the seed stream onto that many distinct batches
+    (power-law repeat traffic). ``warmup_batches`` (default: ``repeat_after``
+    or 2) splits the trace accounting: compiles during warmup are expected,
+    any after it count as ``retraces_after_warmup``.
+    """
     fanouts = fanouts or [5] * layers
     if len(fanouts) != layers:
         raise ValueError("one fanout per layer required")
+    if warmup_batches is None:
+        warmup_batches = repeat_after if repeat_after else 2
+    warmup_batches = min(warmup_batches, num_batches)
 
     t0 = time.perf_counter()
     graph = table3_graph(dataset, scale=scale, seed=seed)
@@ -85,13 +105,18 @@ def serve(
 
     sampler = FanoutSampler(graph, fanouts, seed=seed)
     loader = MiniBatchLoader(
-        sampler, SeedStream(graph.num_nodes, batch_size, seed=seed),
+        sampler, SeedStream(graph.num_nodes, batch_size, seed=seed,
+                            num_distinct=repeat_after),
         tile=tile, node_block=node_block, bucket=bucket,
         depth=prefetch_depth, num_batches=num_batches,
+        cache_blocks=cache_blocks, cache_layouts=cache_layouts,
     )
 
+    executor = stack.block_executor
     lat, waits, computes, preds = [], [], [], None
     edges_seen = 0
+    retraces_after_warmup = 0
+    traces_at_warmup = None
     t_serve0 = time.perf_counter()
     try:
         while True:
@@ -101,8 +126,10 @@ def serve(
             except StopIteration:
                 break
             t_wait = time.perf_counter() - t0
+            if len(lat) == warmup_batches:
+                traces_at_warmup = executor.trace_count
             t0 = time.perf_counter()
-            logits = stack.apply_blocks(params, mb, feats)
+            logits = stack.apply_blocks(params, mb, feats, compiled=compiled)
             logits.block_until_ready()
             t_fwd = time.perf_counter() - t0
             lat.append(t_wait + t_fwd)
@@ -116,6 +143,8 @@ def serve(
     finally:
         loader.close()
     t_total = time.perf_counter() - t_serve0
+    if traces_at_warmup is not None:
+        retraces_after_warmup = executor.trace_count - traces_at_warmup
 
     n = len(lat)
     if n == 0:
@@ -132,7 +161,16 @@ def serve(
         "seeds_per_s": batch_size * n / max(t_total, 1e-9),
         "edges_per_batch": edges_seen / n,
         "last_preds": preds,
+        "warmup_batches": warmup_batches,
+        "executor_traces": executor.trace_count,
+        "executor_cache_hits": executor.cache_hits,
+        "executor_compiled": executor.num_compiled,
+        "retraces_after_warmup": retraces_after_warmup,
     }
+    for name, cs in loader.cache_stats().items():
+        stats[f"{name}_hits"] = cs["hits"]
+        stats[f"{name}_misses"] = cs["misses"]
+        stats[f"{name}_hit_rate"] = cs["hit_rate"]
     log(f"[serve_rgnn] served {n} batches x {batch_size} seeds: "
         f"latency p50 {stats['latency_ms_p50']:.1f} ms / "
         f"p95 {stats['latency_ms_p95']:.1f} ms "
@@ -140,6 +178,11 @@ def serve(
         f"compute {stats['compute_ms_mean']:.1f} ms avg), "
         f"throughput {stats['seeds_per_s']:.1f} seeds/s, "
         f"avg {stats['edges_per_batch']:.0f} sampled edges/batch")
+    log(f"[serve_rgnn] executor: {executor.trace_count} traces / "
+        f"{executor.cache_hits} cache hits "
+        f"({retraces_after_warmup} retraces after warmup)"
+        + "".join(f", {k.removesuffix('_hit_rate')} hit rate {v:.0%}"
+                  for k, v in stats.items() if k.endswith("_hit_rate")))
     log(f"[serve_rgnn] sample predictions: {preds[:12].tolist()}")
     return stats
 
@@ -168,6 +211,18 @@ def main(argv=None):
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable power-of-two shape bucketing (each batch "
                          "then compiles fresh shapes)")
+    ap.add_argument("--cache-blocks", type=int, default=0,
+                    help="LRU capacity of the sampled-block cache keyed by "
+                         "(seeds, fanout); 0 disables")
+    ap.add_argument("--cache-layouts", type=int, default=0,
+                    help="LRU capacity of the KernelLayouts cache keyed by "
+                         "block signature; 0 disables")
+    ap.add_argument("--repeat-after", type=int, default=None,
+                    help="wrap the seed stream onto N distinct batches "
+                         "(models power-law repeat traffic)")
+    ap.add_argument("--eager", action="store_true",
+                    help="bypass the whole-plan compiled executor (op-by-op "
+                         "debug path)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -185,6 +240,8 @@ def main(argv=None):
         batch_size=args.batch_size, num_batches=args.num_batches,
         backend=args.backend, tile=args.tile, node_block=args.node_block,
         bucket=not args.no_bucket, seed=args.seed,
+        cache_blocks=args.cache_blocks, cache_layouts=args.cache_layouts,
+        repeat_after=args.repeat_after, compiled=not args.eager,
     )
 
 

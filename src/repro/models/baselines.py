@@ -19,6 +19,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.graph import GraphTensors
 from repro.kernels import ref as R
 
@@ -53,7 +54,7 @@ def rgcn_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
                  activation: str = "relu", per_type_loop: bool = False):
     x = feats["feature"]
     msg = _maybe_loop(x[gt.src], params["W_rel"], gt.etype, per_type_loop)
-    agg = jax.ops.segment_sum(msg, gt.dst, num_segments=gt.num_nodes)
+    agg = compat.segment_sum(msg, gt.dst, gt.num_nodes)
     deg = (gt.dst_ptr[1:] - gt.dst_ptr[:-1]).astype(agg.dtype)
     agg = agg / jnp.maximum(deg, 1.0)[:, None]
     h = agg + x @ params["W_self"]
@@ -71,8 +72,8 @@ def rgat_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
     raw = atts + attt
     raw = jnp.where(raw > 0, raw, slope * raw)
     att = R.edge_softmax_ref(raw, gt.dst, gt.num_nodes)
-    out = jax.ops.segment_sum(att[:, None] * hs, gt.dst,
-                              num_segments=gt.num_nodes)
+    out = compat.segment_sum(att[:, None] * hs, gt.dst,
+                             gt.num_nodes)
     return {"h_out": out}
 
 
@@ -87,8 +88,8 @@ def hgt_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
     msg = _maybe_loop(vv[gt.src], params["W_msg"], gt.etype, per_type_loop)
     raw = jnp.sum(katt * qq[gt.dst], axis=-1) / jnp.sqrt(jnp.float32(d))
     att = R.edge_softmax_ref(raw, gt.dst, gt.num_nodes)
-    out = jax.ops.segment_sum(att[:, None] * msg, gt.dst,
-                              num_segments=gt.num_nodes)
+    out = compat.segment_sum(att[:, None] * msg, gt.dst,
+                             gt.num_nodes)
     return {"h_out": out}
 
 

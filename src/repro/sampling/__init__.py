@@ -13,8 +13,10 @@ from repro.sampling.sampler import (  # noqa: F401
     FanoutSampler,
 )
 from repro.sampling.loader import (  # noqa: F401
+    LRUCache,
     MiniBatch,
     MiniBatchLoader,
     SeedStream,
+    block_signature,
     build_minibatch,
 )

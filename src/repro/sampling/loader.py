@@ -6,10 +6,25 @@ crucially — builds the tile-aligned ``KernelLayouts`` for every block on the
 host, off the accelerator path. The consumer (training or serving loop) only
 ever dequeues device-ready ``MiniBatch`` bundles, so layout construction
 (NumPy segment padding / CSR blocking) overlaps with accelerator compute.
+
+Serving traffic is power-law, so the loader layers two LRU caches over that
+pipeline (ROADMAP "cached neighbor layouts"):
+
+* a **KernelLayouts cache** keyed by block signature (a content hash of the
+  block graph's edge/node-type arrays plus the tile/bucket config) — blocks
+  that sample the same subgraph skip the NumPy padding/CSR-blocking passes;
+* a **sampled-block cache** keyed by ``(seeds, fanout)`` — repeated seed
+  batches skip sampling *and* layout construction entirely and return the
+  previously built device-ready ``MiniBatch``.
+
+Hit/miss counters are exposed (``cache_stats``) so the serving driver and
+benchmarks can report and assert steady-state reuse.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import queue
 import threading
 from typing import Callable, List, Optional, Union
@@ -18,10 +33,69 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import codegen
-from repro.core.graph import GraphTensors
+from repro.core.graph import GraphTensors, HeteroGraph
 from repro.kernels.layout import pow2ceil
 from repro.sampling.bucketing import pad_block_graph, pad_index
 from repro.sampling.sampler import BlockSequence, FanoutSampler
+
+
+class LRUCache:
+    """Minimal LRU map with hit/miss/eviction counters (single-consumer:
+    each loader's producer thread owns its caches, so no locking)."""
+
+    def __init__(self, maxsize: int = 64):
+        if maxsize <= 0:
+            raise ValueError("LRUCache needs a positive maxsize")
+        self.maxsize = maxsize
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        try:
+            v = self._d.pop(key)
+        except KeyError:
+            self.misses += 1
+            return None
+        self._d[key] = v          # re-insert: most recently used
+        self.hits += 1
+        return v
+
+    def put(self, key, value) -> None:
+        self._d.pop(key, None)
+        self._d[key] = value
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._d),
+                "hit_rate": self.hit_rate}
+
+
+def block_signature(hg: HeteroGraph, tile: int, node_block: int,
+                    bucket: bool) -> tuple:
+    """Content key for a block graph's kernel layouts: two blocks with equal
+    signatures produce identical ``KernelLayouts`` (all layout products are
+    pure functions of the edge arrays, node types, and the tile config)."""
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (hg.src, hg.dst, hg.etype, hg.node_type):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return (hg.num_nodes, hg.num_ntypes, hg.num_etypes,
+            tile, node_block, bool(bucket), h.digest())
 
 
 class SeedStream:
@@ -31,14 +105,23 @@ class SeedStream:
     duplicate seeds within a batch are exercised). ``batch(step)`` is a pure
     function of (seed, step), the same restart-determinism contract as
     ``SyntheticLMStream``.
+
+    ``num_distinct`` models power-law / repeating traffic: steps wrap onto
+    ``step % num_distinct``, so the stream cycles over a fixed set of seed
+    batches — the workload shape that makes the sampled-block and layout
+    caches (and the compiled-executor cache) pay off.
     """
 
-    def __init__(self, num_nodes: int, batch_size: int, seed: int = 0):
+    def __init__(self, num_nodes: int, batch_size: int, seed: int = 0,
+                 num_distinct: Optional[int] = None):
         self.num_nodes = num_nodes
         self.batch_size = batch_size
         self.seed = seed
+        self.num_distinct = num_distinct
 
     def batch(self, step: int) -> np.ndarray:
+        if self.num_distinct:
+            step = step % self.num_distinct
         rng = np.random.default_rng((self.seed, step))
         return rng.integers(0, self.num_nodes, size=self.batch_size,
                             dtype=np.int32)
@@ -64,7 +147,8 @@ class MiniBatch:
 
 
 def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
-                    node_block: int = 128, bucket: bool = False) -> MiniBatch:
+                    node_block: int = 128, bucket: bool = False,
+                    layout_cache: Optional[LRUCache] = None) -> MiniBatch:
     """Host-side assembly of a ``MiniBatch`` from a sampled ``BlockSequence``.
 
     With ``bucket=True`` (the serving fast path) each block graph, its
@@ -73,6 +157,10 @@ def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
     from warm compilation caches. Padding is numerically inert: pad
     nodes/edges only feed pad rows, which the hop-chaining gathers never
     read.
+
+    ``layout_cache`` (an ``LRUCache``) memoizes ``KernelLayouts`` by block
+    signature, skipping the host-side NumPy layout passes for blocks seen
+    before.
     """
     graphs = [b.graph for b in seq.blocks]
     input_ids = seq.input_node_ids
@@ -88,14 +176,24 @@ def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
                       else pow2ceil(d.shape[0]))
             for i, d in enumerate(dst_locals)
         ]
+
+    def layouts_for(g: HeteroGraph) -> codegen.KernelLayouts:
+        if layout_cache is None:
+            return codegen.build_kernel_layouts(
+                g, tile=tile, node_block=node_block, bucket=bucket)
+        key = block_signature(g, tile, node_block, bucket)
+        kl = layout_cache.get(key)
+        if kl is None:
+            kl = codegen.build_kernel_layouts(
+                g, tile=tile, node_block=node_block, bucket=bucket)
+            layout_cache.put(key, kl)
+        return kl
+
     return MiniBatch(
         step=step,
         seq=seq,
         tensors=[g.to_tensors() for g in graphs],
-        layouts=[codegen.build_kernel_layouts(g, tile=tile,
-                                              node_block=node_block,
-                                              bucket=bucket)
-                 for g in graphs],
+        layouts=[layouts_for(g) for g in graphs],
         input_ids=jnp.asarray(input_ids),
         dst_locals=[jnp.asarray(d) for d in dst_locals],
         seed_perm=jnp.asarray(seq.seed_perm),
@@ -108,6 +206,13 @@ class MiniBatchLoader:
     ``seed_source`` is a ``SeedStream`` or any ``step -> np.ndarray``
     callable. Iteration yields ``MiniBatch`` in step order; with
     ``num_batches`` set the loader raises ``StopIteration`` afterwards.
+
+    ``cache_blocks``/``cache_layouts`` give the two LRU capacities (0
+    disables either). The sampled-block cache is keyed by
+    ``(seeds, fanout, layout config)``: a repeated seed batch returns the
+    block sampled at its first occurrence (re-stamped with the current
+    step), trading per-request resampling noise for skipping the whole
+    host pipeline — the intended semantics for hot serving keys.
     """
 
     _SENTINEL = object()
@@ -123,6 +228,8 @@ class MiniBatchLoader:
         depth: int = 2,
         start_step: int = 0,
         num_batches: Optional[int] = None,
+        cache_blocks: int = 0,
+        cache_layouts: int = 0,
     ):
         self.sampler = sampler
         self._seeds_for = (seed_source.batch if isinstance(seed_source, SeedStream)
@@ -131,6 +238,10 @@ class MiniBatchLoader:
         self.node_block = node_block
         self.bucket = bucket
         self.num_batches = num_batches
+        self.block_cache = LRUCache(cache_blocks) if cache_blocks else None
+        self.layout_cache = LRUCache(cache_layouts) if cache_layouts else None
+        self._fanout_key = tuple(
+            tuple(int(x) for x in f) for f in sampler.fanouts)
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = False
         self._stop = threading.Event()
@@ -138,10 +249,31 @@ class MiniBatchLoader:
         self._thread = threading.Thread(target=self._fill, daemon=True)
         self._thread.start()
 
+    def cache_stats(self) -> dict:
+        """Hit/miss counters of both loader caches (empty dict if disabled)."""
+        out = {}
+        if self.block_cache is not None:
+            out["block_cache"] = self.block_cache.stats()
+        if self.layout_cache is not None:
+            out["layout_cache"] = self.layout_cache.stats()
+        return out
+
     def _build(self, step: int) -> MiniBatch:
-        seq = self.sampler.sample(self._seeds_for(step), batch_index=step)
-        return build_minibatch(seq, step=step, tile=self.tile,
-                               node_block=self.node_block, bucket=self.bucket)
+        seeds = self._seeds_for(step)
+        key = None
+        if self.block_cache is not None:
+            key = (seeds.tobytes(), self._fanout_key, self.tile,
+                   self.node_block, self.bucket)
+            mb = self.block_cache.get(key)
+            if mb is not None:
+                return dataclasses.replace(mb, step=step)
+        seq = self.sampler.sample(seeds, batch_index=step)
+        mb = build_minibatch(seq, step=step, tile=self.tile,
+                             node_block=self.node_block, bucket=self.bucket,
+                             layout_cache=self.layout_cache)
+        if self.block_cache is not None:
+            self.block_cache.put(key, mb)
+        return mb
 
     def _fill(self):
         step = self._start_step
