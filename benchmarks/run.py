@@ -11,6 +11,7 @@ fig11  — hidden-dim sweep (Fig. 11)
 loc    — LoC report (§4.1)
 serve  — sampled mini-batch serving vs full-graph inference
 serve_cached — cache-hit-rate + per-batch latency of the cached serving path
+train_sampled — neighbor-sampled training step latency / epoch throughput
 """
 import argparse
 import sys
@@ -20,13 +21,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,table5,fig9,fig10,fig11,loc,"
-                         "serve,serve_cached")
+                         "serve,serve_cached,train_sampled")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig8_speedup, fig9_breakdown, fig10_memory,
                             fig11_dims, loc_report, serve_cached,
-                            serve_sampled, table5_opts)
+                            serve_sampled, table5_opts, train_sampled)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -38,6 +39,7 @@ def main() -> None:
         ("fig8", fig8_speedup.run),
         ("serve", serve_sampled.run),
         ("serve_cached", serve_cached.run),
+        ("train_sampled", train_sampled.run),
     ]
     for name, fn in jobs:
         if only and name not in only:

@@ -1,0 +1,141 @@
+"""Neighbor-sampled training benchmark: step latency + epoch throughput.
+
+Runs the sampled RGNN trainer (``launch/train_rgnn.py``) on the reduced
+synthetic heterograph and reports per-step latency (one compiled
+``grad_and_update`` per mini-batch), end-to-end seed throughput, and
+compiled-executor trace counts.
+
+``--ci`` asserts the steady-state training contract: after the warmup
+epoch the compiled train step retraces **zero** times across two further
+epochs (shape-bucketed mini-batches all hit the executor compile cache),
+and neighbor sampling stays stochastic across epochs — the same seed batch
+draws fresh blocks each epoch instead of replaying a stale cached block
+(the ``(seeds, fanout)``-keyed LRU bug). A retrace or a replayed block
+fails the step.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+CONFIG = dict(
+    model="rgat", dataset="synthetic", scale=0.05, layers=2, dim=16,
+    hidden=16, classes=6, fanouts=[3, 3], batch_size=32, epochs=3,
+    lr=1e-2, tile=8, node_block=8, bucket=True, seed=0, val_frac=0.0,
+    eval_every_epochs=0,
+)
+
+
+def run(out=print, backend: str = "xla", scale: float = 0.2):
+    from repro.launch.train_rgnn import train
+    cfg = dict(CONFIG, scale=scale, dim=32, hidden=32, batch_size=64,
+               tile=16, node_block=16)
+    stats = train(backend=backend, log=lambda *a, **k: None, **cfg)
+    out(csv_row("train_sampled/step", stats["step_ms_p50"] / 1e3,
+                f"seeds_per_s={stats['seeds_per_s']:.0f};"
+                f"traces={stats['executor_traces']};"
+                f"retraces_after_warmup={stats['retraces_after_warmup']}"))
+    epoch_s = stats["step_ms_p50"] / 1e3 * stats["batches_per_epoch"]
+    out(csv_row("train_sampled/epoch", epoch_s,
+                f"batches_per_epoch={stats['batches_per_epoch']};"
+                f"final_loss={stats['final_loss']:.4f}"))
+    return stats
+
+
+def check_fresh_blocks_per_epoch(failures) -> None:
+    """The sampler/loader must draw fresh neighborhoods each epoch for the
+    same seed batch — stale replay out of the (seeds, fanout)-keyed block
+    cache would silently destroy sampling stochasticity under training.
+    Appends failure strings to ``failures`` (shared with the regression
+    test in tests/test_sampling.py — one implementation, two gates)."""
+    from repro.core.graph import synthetic_heterograph
+    from repro.sampling import FanoutSampler, MiniBatchLoader
+
+    g = synthetic_heterograph(120, 900, num_ntypes=4, num_etypes=7, seed=0)
+    sampler = FanoutSampler(g, [3, 3], seed=0)
+    seeds = np.arange(32, dtype=np.int32)
+
+    def edge_key(mb):
+        b = mb.seq.blocks[0]
+        return (b.node_ids[b.graph.src].tobytes(),
+                b.node_ids[b.graph.dst].tobytes())
+
+    class ConstantEpochStream:
+        """Same seed batch every step; one step per 'epoch'."""
+        def batch(self, step):
+            return seeds
+        def epoch_of(self, step):
+            return step
+
+    loader = MiniBatchLoader(sampler, ConstantEpochStream(), tile=8,
+                             node_block=8, bucket=True, num_batches=3,
+                             cache_blocks=8)
+    try:
+        keys = [edge_key(mb) for mb in loader]
+        cache = loader.block_cache.stats()
+    finally:
+        loader.close()
+    if len(set(keys)) != len(keys):
+        failures.append(
+            "same seed batch replayed identical blocks across epochs "
+            "(block cache is not epoch-keyed)")
+    if cache["hits"] != 0:
+        failures.append(
+            f"{cache['hits']} block-cache hits across epochs for a "
+            f"training stream (expected 0: fresh sample each epoch)")
+
+
+def ci_check(backend: str = "xla") -> None:
+    """Training retrace/stochasticity regression gate (exit 1 on failure)."""
+    from repro.launch.train_rgnn import train
+
+    stats = train(backend=backend, log=lambda *a, **k: None, **CONFIG)
+    failures = []
+    # zero retraces across the two post-warmup epochs
+    if stats["epochs"] - stats["warmup_steps"] // stats["batches_per_epoch"] \
+            < 2:
+        failures.append("config must leave >= 2 epochs after warmup")
+    if stats["retraces_after_warmup"] != 0:
+        failures.append(
+            f"train step retraced {stats['retraces_after_warmup']}x after "
+            f"the warmup epoch (expected 0 across two epochs)")
+    if stats["executor_traces"] != stats["executor_compiled"]:
+        failures.append(
+            f"trace count {stats['executor_traces']} != compiled entries "
+            f"{stats['executor_compiled']} (each bucket must trace once)")
+    if not (stats["losses"][-1] < stats["losses"][0]):
+        failures.append(
+            f"loss did not decrease: {stats['losses'][0]:.4f} -> "
+            f"{stats['losses'][-1]:.4f}")
+    check_fresh_blocks_per_epoch(failures)
+    if failures:
+        for f in failures:
+            print(f"[train_sampled --ci] FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[train_sampled --ci] OK: {stats['steps']} steps / "
+          f"{stats['epochs']} epochs, {stats['executor_traces']} traces "
+          f"({stats['executor_compiled']} buckets), 0 retraces after "
+          f"warmup, fresh blocks each epoch, loss "
+          f"{stats['losses'][0]:.4f} -> {stats['losses'][-1]:.4f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="assertion mode (retrace + stochasticity gate)")
+    ap.add_argument("--backend", default=None,
+                    choices=["xla", "pallas", "pallas_interpret"])
+    args = ap.parse_args(argv)
+    if args.ci:
+        ci_check(backend=args.backend or "xla")
+    else:
+        print("name,us_per_call,derived")
+        run(backend=args.backend or "xla")
+
+
+if __name__ == "__main__":
+    main()

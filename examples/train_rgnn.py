@@ -1,6 +1,11 @@
-"""End-to-end RGNN training driver: 2-layer RGAT node classifier trained for
-a few hundred steps on a synthetic heterograph (the paper's workload kind),
-with AdamW, cosine LR and checkpointing.
+"""End-to-end RGNN training example: 2-layer RGAT node classifier trained
+on a synthetic heterograph with AdamW, cosine LR and checkpointing.
+
+The forward runs through the compiled executors (``StackTrainExecutor``:
+the whole step — layer-by-layer generated code, cross-entropy, backward
+through the ``custom_vjp`` kernels, AdamW update — is one jitted callable);
+no op-by-op ``execute_plan`` loop is involved. For the neighbor-sampled
+mini-batch trainer, see ``python -m repro.launch.train_rgnn``.
 
     PYTHONPATH=src python examples/train_rgnn.py [--steps 200]
 """
@@ -12,9 +17,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.core.graph import synthetic_heterograph
-from repro.core.module import HectorModule
-from repro.models import rgat_program
 from repro.optim import AdamW, cosine_schedule
+from repro.train import EngineConfig, FullGraphTrainer, RGNNEngine
 
 
 def main(argv=None):
@@ -29,40 +33,24 @@ def main(argv=None):
                                   seed=0, target_compaction=0.5)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(graph.num_nodes, args.dim)), jnp.float32)
-    labels = jnp.asarray(rng.integers(0, args.classes, graph.num_nodes))
+    labels = np.asarray(rng.integers(0, args.classes, graph.num_nodes))
 
-    layer1 = HectorModule(rgat_program(args.dim, args.dim), graph)
-    layer2 = HectorModule(rgat_program(args.dim, args.classes), graph)
-    params = {"l1": layer1.init(jax.random.key(1)),
-              "l2": layer2.init(jax.random.key(2))}
-
-    def forward(p, feats):
-        h = layer1.apply(p["l1"], {"feature": feats})["h_out"]
-        h = jax.nn.relu(h)
-        return layer2.apply(p["l2"], {"feature": h})["h_out"]
-
-    def loss_fn(p):
-        logits = forward(p, x)
-        logp = jax.nn.log_softmax(logits)
-        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
-
+    engine = RGNNEngine(graph, EngineConfig(
+        model="rgat", layers=2, dim=args.dim, hidden=args.dim,
+        classes=args.classes))
     opt = AdamW(learning_rate=cosine_schedule(3e-3, 20, args.steps),
                 weight_decay=0.01)
-    state = opt.init(params)
+    trainer = FullGraphTrainer(engine, x, labels,
+                               np.arange(graph.num_nodes), opt=opt)
+    state = trainer.init_state(engine.init_params(jax.random.key(1)))
     ckpt = Checkpointer(args.ckpt)
 
-    @jax.jit
-    def step(state):
-        loss, grads = jax.value_and_grad(loss_fn)(state.params)
-        return opt.update(grads, state), loss
-
     losses = []
-    for i in range(args.steps):
-        state, loss = step(state)
-        losses.append(float(loss))
-        if (i + 1) % 50 == 0:
-            ckpt.save(i + 1, state)
-            print(f"step {i+1:4d}  loss {losses[-1]:.4f}")
+    for i in range(0, args.steps, 50):
+        state, chunk = trainer.train(state, steps=min(50, args.steps - i))
+        losses.extend(chunk)
+        ckpt.save(i + len(chunk), state)
+        print(f"step {len(losses):4d}  loss {losses[-1]:.4f}")
     ckpt.wait()
     print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} "
           f"(acc proxy: {np.exp(-losses[-1]):.2%} vs chance "

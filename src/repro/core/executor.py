@@ -49,10 +49,10 @@ def _donation_supported() -> bool:
 class _CachedExecutor:
     """Shared machinery: explicit signature -> jitted-callable cache."""
 
-    def __init__(self, donate_feats: bool, feats_argnum: int):
+    def __init__(self, donate: bool, donate_argnums: Sequence[int]):
         self._cache: Dict[tuple, object] = {}
-        self._donate = donate_feats and _donation_supported()
-        self._feats_argnum = feats_argnum
+        self._donate = donate and _donation_supported()
+        self._donate_argnums = tuple(donate_argnums)
         self.cache_hits = 0
         self.cache_misses = 0
         self.trace_count = 0   # incremented inside the traced fn: counts
@@ -66,7 +66,7 @@ class _CachedExecutor:
         fn = self._cache.get(key)
         if fn is None:
             self.cache_misses += 1
-            donate = (self._feats_argnum,) if self._donate else ()
+            donate = self._donate_argnums if self._donate else ()
             fn = jax.jit(self._traced, donate_argnums=donate)
             self._cache[key] = fn
         else:
@@ -100,7 +100,7 @@ class PlanExecutor(_CachedExecutor):
 
     def __init__(self, plan, backend: str = "xla",
                  donate_feats: bool = False):
-        super().__init__(donate_feats, feats_argnum=3)
+        super().__init__(donate_feats, donate_argnums=(3,))
         self.plan = plan
         self.backend = backend
 
@@ -124,7 +124,7 @@ class BlockExecutor(_CachedExecutor):
 
     def __init__(self, plans: Sequence, backend: str = "xla",
                  activation: str = "relu", donate_feats: bool = True):
-        super().__init__(donate_feats, feats_argnum=5)
+        super().__init__(donate_feats, donate_argnums=(5,))
         self.plans = list(plans)
         self.backend = backend
         self.activation = activation
@@ -146,3 +146,129 @@ class BlockExecutor(_CachedExecutor):
         feats = {"feature": global_feats[mb.input_ids]}
         return self(params, mb.tensors, mb.layouts, mb.dst_locals,
                     mb.seed_perm, feats)
+
+
+# ---------------------------------------------------------------------------
+# compiled training steps
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Mean cross-entropy + accuracy over [rows, classes] logits and int
+    labels; the per-seed training objective (one row per seed/node)."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=-1) == labels)
+                   .astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+class BlockTrainExecutor(_CachedExecutor):
+    """Compiled neighbor-sampled SGD step over a stack of per-hop plans.
+
+    One jitted callable covers the whole step: block-sequence forward (every
+    hop's kernels), per-seed cross-entropy on the gathered seed rows,
+    backward through the gather-fused ``custom_vjp`` kernels, and the
+    optimizer update — behind the same signature compile cache as the
+    forward executors, so shape-bucketed mini-batches retrace zero times
+    after warmup.
+
+    The optimizer state is donated on accelerator backends (its buffers are
+    consumed by the update — callers must not reuse the old state), as are
+    the per-batch gathered features.
+    """
+
+    def __init__(self, plans: Sequence, opt, backend: str = "xla",
+                 activation: str = "relu", donate_state: bool = True):
+        # argnums in _traced order: 0=state, 6=feats
+        super().__init__(donate_state, donate_argnums=(0, 6))
+        self.plans = list(plans)
+        self.opt = opt
+        self.backend = backend
+        self.activation = activation
+
+    def _traced(self, state, gts, kls, dst_locals, seed_perm, labels, feats):
+        self.trace_count += 1
+
+        def loss_fn(params):
+            logits = codegen.execute_block_sequence(
+                self.plans, params, gts, kls, dst_locals, seed_perm, feats,
+                backend=self.backend, activation=self.activation)
+            return softmax_xent(logits, labels)
+
+        (loss, acc), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        new_state = self.opt.update(grads, state)
+        return new_state, {"loss": loss, "accuracy": acc}
+
+    def grad_and_update(self, state, mb, labels, feats):
+        """One optimizer step over a ``sampling.MiniBatch``-shaped bundle.
+
+        ``labels`` must be aligned with the requested seed order (use
+        ``BlockSequence.slice_labels``); ``feats`` is the per-batch gathered
+        feature dict for the first block's node set. Returns
+        ``(new_state, {"loss", "accuracy"})``.
+        """
+        return self._call(state, list(mb.tensors), list(mb.layouts),
+                          list(mb.dst_locals), mb.seed_perm, labels, feats)
+
+
+class StackTrainExecutor(_CachedExecutor):
+    """Compiled full-graph SGD step over a multi-layer stack — the training
+    analogue of ``PlanExecutor``: layer-by-layer forward over the shared
+    graph tensors/layouts, cross-entropy on the ``idx`` node rows, backward
+    and optimizer update in one jitted callable.
+
+    Serves as the parity baseline for the sampled trainer (full-fanout
+    sampled steps must reproduce its loss and gradients) and as the
+    periodic full-graph evaluator.
+    """
+
+    def __init__(self, plans: Sequence, opt, backend: str = "xla",
+                 activation: str = "relu", donate_state: bool = True):
+        super().__init__(donate_state, donate_argnums=(0,))
+        self.plans = list(plans)
+        self.opt = opt
+        self.backend = backend
+        self.activation = activation
+        self._eval_fn = None
+
+    def _forward(self, params, gt, kl, feats):
+        act = codegen._ACTIVATIONS[self.activation]
+        cur = dict(feats)
+        h = None
+        last = len(self.plans) - 1
+        for i, (plan, p) in enumerate(zip(self.plans, params)):
+            out = codegen.execute_plan(plan, p, gt, cur, kl, self.backend)
+            h = out[plan.outputs[0]]
+            if i < last:
+                cur = {"feature": act(h)}
+        return h
+
+    def _traced(self, state, gt, kl, idx, labels, feats):
+        self.trace_count += 1
+
+        def loss_fn(params):
+            h = self._forward(params, gt, kl, feats)
+            return softmax_xent(h[idx], labels)
+
+        (loss, acc), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params)
+        new_state = self.opt.update(grads, state)
+        return new_state, {"loss": loss, "accuracy": acc}
+
+    def grad_and_update(self, state, gt, kl, idx, labels, feats):
+        """One full-graph optimizer step; loss is taken over the ``idx``
+        node rows (the training split)."""
+        return self._call(state, gt, kl, idx, labels, feats)
+
+    # -- compiled evaluation (no update) ---------------------------------
+    def _traced_eval(self, params, gt, kl, idx, labels, feats):
+        h = self._forward(params, gt, kl, feats)
+        return softmax_xent(h[idx], labels)
+
+    def evaluate(self, params, gt, kl, idx, labels, feats):
+        """Full-graph loss/accuracy on the ``idx`` rows (jitted once —
+        full-graph shapes are static)."""
+        if self._eval_fn is None:
+            self._eval_fn = jax.jit(self._traced_eval)
+        loss, acc = self._eval_fn(params, gt, kl, idx, labels, feats)
+        return {"loss": loss, "accuracy": acc}

@@ -28,23 +28,9 @@ import jax.numpy as jnp
 
 from repro.core.graph import CPU_REDUCED_SCALES as REDUCED_SCALES
 from repro.core.graph import table3_graph
-from repro.core.module import HectorStack
-from repro.models import hgt_program, rgat_program, rgcn_program
-from repro.sampling import FanoutSampler, MiniBatchLoader, SeedStream
-
-MODEL_PROGRAMS = {"rgcn": rgcn_program, "rgat": rgat_program,
-                  "hgt": hgt_program}
-
-
-def _parse_fanout(spec: str, layers: int):
-    parts = [int(p) for p in spec.split(",")]
-    if len(parts) == 1:
-        parts = parts * layers
-    if len(parts) != layers:
-        raise ValueError(
-            f"--fanout needs 1 or {layers} comma-separated ints, got {spec!r}"
-        )
-    return parts
+from repro.sampling import SeedStream
+from repro.train.engine import (MODEL_PROGRAMS, EngineConfig, RGNNEngine,
+                                parse_fanout)
 
 
 def serve(
@@ -78,9 +64,6 @@ def serve(
     or 2) splits the trace accounting: compiles during warmup are expected,
     any after it count as ``retraces_after_warmup``.
     """
-    fanouts = fanouts or [5] * layers
-    if len(fanouts) != layers:
-        raise ValueError("one fanout per layer required")
     if warmup_batches is None:
         warmup_batches = repeat_after if repeat_after else 2
     warmup_batches = min(warmup_batches, num_batches)
@@ -90,29 +73,26 @@ def serve(
     rng = np.random.default_rng(seed)
     feats = jnp.asarray(rng.normal(size=(graph.num_nodes, dim)), jnp.float32)
     t_graph = time.perf_counter() - t0
+
+    engine = RGNNEngine(graph, EngineConfig(
+        model=model, layers=layers, dim=dim, hidden=hidden, classes=classes,
+        fanouts=fanouts, backend=backend, tile=tile, node_block=node_block,
+        bucket=bucket, seed=seed))
+    fanouts = engine.cfg.fanouts
     log(f"[serve_rgnn] {model} on {dataset} (scale {scale}): "
         f"{graph.num_nodes} nodes, {graph.num_edges} edges, "
         f"{graph.num_etypes} etypes; fanouts={fanouts} "
         f"(graph build {t_graph:.2f}s)")
+    params = engine.init_params(jax.random.key(seed))
 
-    prog_fn = MODEL_PROGRAMS[model]
-    dims = [dim] + [hidden] * (layers - 1) + [classes]
-    stack = HectorStack(
-        [prog_fn(dims[i], dims[i + 1]) for i in range(layers)],
-        graph, backend=backend, tile=tile, node_block=node_block, jit=False,
-    )
-    params = stack.init(jax.random.key(seed))
-
-    sampler = FanoutSampler(graph, fanouts, seed=seed)
-    loader = MiniBatchLoader(
-        sampler, SeedStream(graph.num_nodes, batch_size, seed=seed,
-                            num_distinct=repeat_after),
-        tile=tile, node_block=node_block, bucket=bucket,
-        depth=prefetch_depth, num_batches=num_batches,
+    loader = engine.make_loader(
+        SeedStream(graph.num_nodes, batch_size, seed=seed,
+                   num_distinct=repeat_after),
+        num_batches=num_batches, depth=prefetch_depth,
         cache_blocks=cache_blocks, cache_layouts=cache_layouts,
     )
 
-    executor = stack.block_executor
+    executor = engine.block_executor
     lat, waits, computes, preds = [], [], [], None
     edges_seen = 0
     retraces_after_warmup = 0
@@ -129,7 +109,8 @@ def serve(
             if len(lat) == warmup_batches:
                 traces_at_warmup = executor.trace_count
             t0 = time.perf_counter()
-            logits = stack.apply_blocks(params, mb, feats, compiled=compiled)
+            logits = engine.forward_minibatch(params, mb, feats,
+                                              compiled=compiled)
             logits.block_until_ready()
             t_fwd = time.perf_counter() - t0
             lat.append(t_wait + t_fwd)
@@ -236,7 +217,7 @@ def main(argv=None):
         model=args.model, dataset=args.dataset, scale=scale,
         layers=args.layers, dim=args.dim, hidden=args.hidden,
         classes=args.classes,
-        fanouts=_parse_fanout(args.fanout, args.layers),
+        fanouts=parse_fanout(args.fanout, args.layers),
         batch_size=args.batch_size, num_batches=args.num_batches,
         backend=args.backend, tile=args.tile, node_block=args.node_block,
         bucket=not args.no_bucket, seed=args.seed,

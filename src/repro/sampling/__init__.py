@@ -13,6 +13,7 @@ from repro.sampling.sampler import (  # noqa: F401
     FanoutSampler,
 )
 from repro.sampling.loader import (  # noqa: F401
+    EpochSeedStream,
     LRUCache,
     MiniBatch,
     MiniBatchLoader,

@@ -127,6 +127,59 @@ class SeedStream:
                             dtype=np.int32)
 
 
+class EpochSeedStream:
+    """Epoch-aware training seed stream: shuffled, without replacement.
+
+    Each epoch is an independent permutation of ``ids`` (rng keyed by
+    ``(seed, epoch)``) cut into fixed-size batches; ``drop_last`` keeps the
+    batch shape static so the compiled train step never sees a ragged tail.
+    ``batch(step)`` is a pure function of ``(seed, step)`` — the same
+    restart-determinism contract as ``SeedStream`` — so a trainer resumed
+    mid-epoch replays the exact remaining batches of that epoch.
+
+    ``epoch_of(step)`` is the loader's epoch hook: when present on a seed
+    source, ``MiniBatchLoader`` keys the sampler rng *and* the sampled-block
+    cache by the epoch, so neighbor resampling stays stochastic across
+    epochs (no stale block replay).
+    """
+
+    def __init__(self, ids: np.ndarray, batch_size: int, seed: int = 0,
+                 drop_last: bool = True):
+        self.ids = np.asarray(ids, dtype=np.int32)
+        if self.ids.ndim != 1 or self.ids.size == 0:
+            raise ValueError("ids must be a non-empty 1-D int array")
+        if batch_size <= 0:
+            raise ValueError("batch_size must be positive")
+        self.batch_size = min(batch_size, self.ids.size)
+        self.seed = seed
+        self.drop_last = drop_last
+        n = self.ids.size
+        self.batches_per_epoch = (n // self.batch_size if drop_last
+                                  else -(-n // self.batch_size))
+        self._perm_cache = (-1, None)   # (epoch, permutation) memo
+
+    @property
+    def num_ids(self) -> int:
+        return int(self.ids.size)
+
+    def epoch_of(self, step: int) -> int:
+        return step // self.batches_per_epoch
+
+    def steps_for(self, epochs: int) -> int:
+        return epochs * self.batches_per_epoch
+
+    def batch(self, step: int) -> np.ndarray:
+        epoch, k = divmod(step, self.batches_per_epoch)
+        if self._perm_cache[0] != epoch:
+            # still a pure function of (seed, epoch): the memo only avoids
+            # re-permuting the full id set for every batch of an epoch
+            self._perm_cache = (epoch, np.random.default_rng(
+                (self.seed, epoch)).permutation(self.ids.size))
+        perm = self._perm_cache[1]
+        lo = k * self.batch_size
+        return self.ids[perm[lo:lo + self.batch_size]]
+
+
 @dataclasses.dataclass
 class MiniBatch:
     """Device-ready bundle for one sampled batch: per-hop graph tensors and
@@ -209,10 +262,15 @@ class MiniBatchLoader:
 
     ``cache_blocks``/``cache_layouts`` give the two LRU capacities (0
     disables either). The sampled-block cache is keyed by
-    ``(seeds, fanout, layout config)``: a repeated seed batch returns the
-    block sampled at its first occurrence (re-stamped with the current
-    step), trading per-request resampling noise for skipping the whole
-    host pipeline — the intended semantics for hot serving keys.
+    ``(seeds, fanout, layout config, sampler epoch)``: for *serving* streams
+    (no epoch) a repeated seed batch returns the block sampled at its first
+    occurrence (re-stamped with the current step), trading per-request
+    resampling noise for skipping the whole host pipeline. For *training*
+    streams — any seed source exposing ``epoch_of(step)``, e.g.
+    ``EpochSeedStream`` — the epoch is part of the key and also re-keys the
+    sampler rng, so the same seed batch in a later epoch draws a fresh
+    neighborhood instead of silently replaying a stale cached block
+    (which would destroy neighbor-sampling stochasticity).
     """
 
     _SENTINEL = object()
@@ -220,7 +278,8 @@ class MiniBatchLoader:
     def __init__(
         self,
         sampler: FanoutSampler,
-        seed_source: Union[SeedStream, Callable[[int], np.ndarray]],
+        seed_source: Union[SeedStream, EpochSeedStream,
+                           Callable[[int], np.ndarray]],
         *,
         tile: int = 128,
         node_block: int = 128,
@@ -232,8 +291,10 @@ class MiniBatchLoader:
         cache_layouts: int = 0,
     ):
         self.sampler = sampler
-        self._seeds_for = (seed_source.batch if isinstance(seed_source, SeedStream)
-                           else seed_source)
+        self._seeds_for = (seed_source.batch
+                           if hasattr(seed_source, "batch") else seed_source)
+        # training streams expose epoch_of(step); serving streams don't
+        self._epoch_of = getattr(seed_source, "epoch_of", None)
         self.tile = tile
         self.node_block = node_block
         self.bucket = bucket
@@ -260,14 +321,15 @@ class MiniBatchLoader:
 
     def _build(self, step: int) -> MiniBatch:
         seeds = self._seeds_for(step)
+        epoch = self._epoch_of(step) if self._epoch_of is not None else None
         key = None
         if self.block_cache is not None:
             key = (seeds.tobytes(), self._fanout_key, self.tile,
-                   self.node_block, self.bucket)
+                   self.node_block, self.bucket, epoch)
             mb = self.block_cache.get(key)
             if mb is not None:
                 return dataclasses.replace(mb, step=step)
-        seq = self.sampler.sample(seeds, batch_index=step)
+        seq = self.sampler.sample(seeds, batch_index=step, epoch=epoch)
         mb = build_minibatch(seq, step=step, tile=self.tile,
                              node_block=self.node_block, bucket=self.bucket,
                              layout_cache=self.layout_cache)

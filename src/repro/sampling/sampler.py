@@ -23,7 +23,7 @@ exact same mini-batch stream.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -95,6 +95,16 @@ class BlockSequence:
         """Global IDs whose input features the first hop consumes."""
         return self.blocks[0].node_ids
 
+    def slice_labels(self, labels: np.ndarray) -> np.ndarray:
+        """Per-batch label slice aligned with the block forward's output.
+
+        The block forward returns the final frontier's rows re-permuted by
+        ``seed_perm`` — i.e. one row per requested seed, in request order
+        (duplicates included) — so the aligned labels are simply
+        ``labels[self.seeds]``.
+        """
+        return np.asarray(labels)[self.seeds]
+
     def describe(self) -> str:
         lines = [f"BlockSequence(seeds={len(self.seeds)})"]
         for i, b in enumerate(self.blocks):
@@ -131,13 +141,24 @@ class FanoutSampler:
         return len(self.fanouts)
 
     # ------------------------------------------------------------------
-    def sample(self, seeds: np.ndarray, batch_index: int = 0) -> BlockSequence:
+    def sample(self, seeds: np.ndarray, batch_index: int = 0,
+               epoch: Optional[int] = None) -> BlockSequence:
+        """Sample a ``BlockSequence`` for ``seeds``.
+
+        The rng is keyed by ``(sampler seed, batch_index)`` — or
+        ``(sampler seed, epoch, batch_index)`` when ``epoch`` is given, the
+        epoch-aware training contract: replaying a step reproduces its
+        blocks exactly, while the same seed batch in a different epoch
+        draws a fresh neighborhood.
+        """
         seeds = np.asarray(seeds, dtype=np.int32)
         if seeds.ndim != 1 or seeds.size == 0:
             raise ValueError("seeds must be a non-empty 1-D int array")
         if seeds.min() < 0 or seeds.max() >= self.hg.num_nodes:
             raise ValueError("seed node id out of range")
-        rng = np.random.default_rng((self.seed, int(batch_index)))
+        key = ((self.seed, int(batch_index)) if epoch is None
+               else (self.seed, int(epoch), int(batch_index)))
+        rng = np.random.default_rng(key)
 
         frontier = np.unique(seeds)
         seed_perm = np.searchsorted(frontier, seeds).astype(np.int32)

@@ -1,0 +1,14 @@
+"""RGNN training subsystem: the shared execution engine (graph + stack +
+sampler + loader wiring used by both serving and training) and the
+trainers that run neighbor-sampled / full-graph SGD as single compiled
+steps behind the executor compile cache."""
+from repro.train.engine import (  # noqa: F401
+    MODEL_PROGRAMS,
+    EngineConfig,
+    RGNNEngine,
+    parse_fanout,
+)
+from repro.train.trainer import (  # noqa: F401
+    FullGraphTrainer,
+    SampledTrainer,
+)

@@ -1,0 +1,146 @@
+"""Shared RGNN execution engine: graph + stack + sampler + loader wiring.
+
+``launch/serve_rgnn.py`` used to assemble this pipeline inline (model
+programs -> ``HectorStack`` -> ``FanoutSampler`` -> ``MiniBatchLoader``);
+the trainer needs the identical stack, so the wiring lives here once and
+both drivers build an ``RGNNEngine``. The engine owns everything that is a
+pure function of (graph, model config): the lowered per-layer plans, the
+compiled block executor with its compile cache, the full-graph tensors and
+kernel layouts, and the fanout sampler. Traffic-dependent pieces — seed
+streams, loaders, optimizer state — are created per driver via
+``make_loader`` and the ``train/trainer.py`` classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import HeteroGraph
+from repro.core.module import HectorStack
+from repro.models import hgt_program, rgat_program, rgcn_program
+from repro.sampling import FanoutSampler, MiniBatchLoader
+
+MODEL_PROGRAMS = {"rgcn": rgcn_program, "rgat": rgat_program,
+                  "hgt": hgt_program}
+
+
+def parse_fanout(spec: str, layers: int) -> List[int]:
+    """Parse a ``--fanout`` CLI spec: one int, or one per layer, comma
+    separated; ``-1`` means the full neighborhood."""
+    parts = [int(p) for p in spec.split(",")]
+    if len(parts) == 1:
+        parts = parts * layers
+    if len(parts) != layers:
+        raise ValueError(
+            f"--fanout needs 1 or {layers} comma-separated ints, got {spec!r}"
+        )
+    return parts
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Model/compilation configuration shared by serving and training."""
+
+    model: str = "rgat"
+    layers: int = 2
+    dim: int = 64
+    hidden: int = 64
+    classes: int = 16
+    fanouts: Optional[Sequence] = None   # default: [5] * layers
+    backend: str = "xla"
+    tile: int = 32
+    node_block: int = 32
+    bucket: bool = True
+    activation: str = "relu"
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.model not in MODEL_PROGRAMS:
+            raise ValueError(f"unknown model {self.model!r}; "
+                             f"have {sorted(MODEL_PROGRAMS)}")
+        self.fanouts = list(self.fanouts) if self.fanouts is not None \
+            else [5] * self.layers
+        if len(self.fanouts) != self.layers:
+            raise ValueError("one fanout per layer required")
+
+    @property
+    def dims(self) -> List[int]:
+        return [self.dim] + [self.hidden] * (self.layers - 1) + [self.classes]
+
+
+class RGNNEngine:
+    """One multi-layer RGNN compiled for one graph, ready for both
+    execution modes: full-graph (``PlanExecutor`` per layer /
+    ``StackTrainExecutor``) and sampled mini-batch (``BlockExecutor`` /
+    ``BlockTrainExecutor``), sharing lowered plans and parameters."""
+
+    def __init__(self, graph: HeteroGraph, cfg: EngineConfig):
+        self.graph = graph
+        self.cfg = cfg
+        prog_fn = MODEL_PROGRAMS[cfg.model]
+        dims = cfg.dims
+        # jit=True so the full-graph path runs through the compiled
+        # PlanExecutor, not the op-by-op debug loop
+        self.stack = HectorStack(
+            [prog_fn(dims[i], dims[i + 1]) for i in range(cfg.layers)],
+            graph, backend=cfg.backend, tile=cfg.tile,
+            node_block=cfg.node_block, activation=cfg.activation, jit=True,
+        )
+        self.sampler = FanoutSampler(graph, cfg.fanouts, seed=cfg.seed)
+
+    # ------------------------------------------------------------------
+    @property
+    def plans(self):
+        return self.stack.plans
+
+    @property
+    def block_executor(self):
+        return self.stack.block_executor
+
+    @property
+    def gt(self):
+        """Full-graph tensors (shared across layers)."""
+        return self.stack.layers[0].gt
+
+    @property
+    def layouts(self):
+        """Full-graph kernel layouts (shared across layers)."""
+        return self.stack.layers[0].layouts
+
+    def init_params(self, key: jax.Array):
+        return self.stack.init(key)
+
+    # ------------------------------------------------------------------
+    def make_loader(
+        self,
+        seed_source: Union[object, Callable[[int], np.ndarray]],
+        *,
+        num_batches: Optional[int] = None,
+        start_step: int = 0,
+        depth: int = 2,
+        cache_blocks: int = 0,
+        cache_layouts: int = 0,
+    ) -> MiniBatchLoader:
+        """A prefetching loader over this engine's sampler/layout config."""
+        return MiniBatchLoader(
+            self.sampler, seed_source,
+            tile=self.cfg.tile, node_block=self.cfg.node_block,
+            bucket=self.cfg.bucket, depth=depth, start_step=start_step,
+            num_batches=num_batches, cache_blocks=cache_blocks,
+            cache_layouts=cache_layouts,
+        )
+
+    # ------------------------------------------------------------------
+    def forward_minibatch(self, params, mb, global_feats,
+                          compiled: bool = True) -> jnp.ndarray:
+        """Sampled forward: per-seed outputs for a ``MiniBatch``."""
+        return self.stack.apply_blocks(params, mb, global_feats,
+                                       compiled=compiled)
+
+    def forward_full(self, params, feats: jnp.ndarray) -> jnp.ndarray:
+        """Full-graph forward (compiled per layer via ``PlanExecutor``)."""
+        return self.stack.apply(params, {"feature": feats})

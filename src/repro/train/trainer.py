@@ -1,0 +1,285 @@
+"""RGNN trainers on the compiled whole-plan executors.
+
+``SampledTrainer`` is the paper's training story made servable-scale:
+neighbor-sampled SGD where the *entire* step — block-sequence forward
+through the gather-fused kernels, per-seed cross-entropy, backward through
+the ``custom_vjp`` kernel templates, AdamW update — is one jitted callable
+(``core.executor.BlockTrainExecutor``) behind the signature compile cache.
+Shape-bucketed mini-batches therefore retrace zero times after warmup;
+trace counters expose that invariant to tests and the ``train_sampled``
+benchmark.
+
+``FullGraphTrainer`` is the dense baseline on ``StackTrainExecutor``: one
+full-graph optimizer step per call. With full-neighborhood fanout the
+sampled step reproduces its loss and gradients exactly (the training
+analogue of the forward-equivalence invariant), which the parity tests pin
+down.
+
+Both trainers checkpoint through ``repro.checkpoint.Checkpointer`` and can
+resume mid-epoch bit-deterministically: the seed stream and the sampler are
+pure functions of the global step, so a resumed run replays the exact
+remaining batches.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.core import executor
+from repro.optim import AdamW, TrainState
+from repro.sampling import EpochSeedStream, build_minibatch
+from repro.train.engine import RGNNEngine
+
+
+def _quiet(*_a, **_k):
+    pass
+
+
+class FullGraphTrainer:
+    """Full-graph SGD over the compiled ``StackTrainExecutor`` step (the
+    only ``execute_plan`` consumer is the executor's traced body)."""
+
+    def __init__(self, engine: RGNNEngine, feats, labels, train_ids,
+                 *, opt: Optional[AdamW] = None, log=print):
+        self.engine = engine
+        self.opt = opt or AdamW(learning_rate=3e-3, weight_decay=0.01)
+        self.feats = jnp.asarray(feats)
+        self.labels = np.asarray(labels)
+        self.train_ids = np.asarray(train_ids, dtype=np.int32)
+        self.log = log or _quiet
+        self.step_exec = executor.StackTrainExecutor(
+            engine.plans, self.opt, backend=engine.cfg.backend,
+            activation=engine.cfg.activation)
+        self._idx = jnp.asarray(self.train_ids)
+        self._labels_train = jnp.asarray(self.labels[self.train_ids])
+
+    def init_state(self, params) -> TrainState:
+        return self.opt.init(params)
+
+    def step(self, state: TrainState):
+        return self.step_exec.grad_and_update(
+            state, self.engine.gt, self.engine.layouts, self._idx,
+            self._labels_train, {"feature": self.feats})
+
+    def train(self, state: TrainState, steps: int, log_every: int = 0):
+        losses: List[float] = []
+        for i in range(steps):
+            state, metrics = self.step(state)
+            losses.append(float(metrics["loss"]))
+            if log_every and (i + 1) % log_every == 0:
+                self.log(f"[train_full] step {i+1:4d} loss {losses[-1]:.4f} "
+                         f"acc {float(metrics['accuracy']):.2%}")
+        return state, losses
+
+    def evaluate(self, params, ids=None) -> Dict[str, float]:
+        ids = self.train_ids if ids is None else np.asarray(ids, np.int32)
+        m = self.step_exec.evaluate(
+            params, self.engine.gt, self.engine.layouts, jnp.asarray(ids),
+            jnp.asarray(self.labels[ids]), {"feature": self.feats})
+        return {k: float(v) for k, v in m.items()}
+
+
+class SampledTrainer:
+    """Neighbor-sampled SGD on the compiled block executor.
+
+    The loop: an ``EpochSeedStream`` shuffles the train IDs without
+    replacement each epoch; the prefetching ``MiniBatchLoader`` samples
+    blocks and builds kernel layouts on a background thread (epoch-keyed,
+    so no stale block replay); each dequeued ``MiniBatch`` runs one
+    compiled ``grad_and_update`` step. Periodic evaluation runs full-graph
+    (via the compiled stack step) and/or sampled validation; checkpoints
+    save ``(global step, TrainState)`` and resume mid-epoch.
+    """
+
+    def __init__(
+        self,
+        engine: RGNNEngine,
+        feats,
+        labels,
+        train_ids,
+        val_ids=None,
+        *,
+        opt: Optional[AdamW] = None,
+        ckpt_dir: Optional[str] = None,
+        cache_layouts: int = 128,
+        prefetch_depth: int = 2,
+        log=print,
+    ):
+        self.engine = engine
+        self.opt = opt or AdamW(learning_rate=3e-3, weight_decay=0.01)
+        self.feats = jnp.asarray(feats)
+        self.labels = np.asarray(labels)
+        self.train_ids = np.asarray(train_ids, dtype=np.int32)
+        # an empty val split means "no validation", not a zero-row eval
+        self.val_ids = (np.asarray(val_ids, dtype=np.int32)
+                        if val_ids is not None and len(val_ids) else None)
+        self.cache_layouts = cache_layouts
+        self.prefetch_depth = prefetch_depth
+        self.log = log or _quiet
+        self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        self.step_exec = executor.BlockTrainExecutor(
+            engine.plans, self.opt, backend=engine.cfg.backend,
+            activation=engine.cfg.activation)
+        # full-graph evaluator shares the optimizer (its update path is
+        # unused for eval) and the engine's plans/layouts
+        self.full = FullGraphTrainer(engine, feats, labels, train_ids,
+                                     opt=self.opt, log=log)
+
+    # ------------------------------------------------------------------
+    def init_state(self, params) -> TrainState:
+        return self.opt.init(params)
+
+    def resume(self, state: TrainState):
+        """Restore the latest checkpoint (if any) into ``state``'s
+        structure; returns ``(state, start_step)``."""
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return state, 0
+        step = self.ckpt.latest_step()
+        return self.ckpt.restore(state), step
+
+    # ------------------------------------------------------------------
+    def train(
+        self,
+        state: TrainState,
+        *,
+        epochs: int = 1,
+        batch_size: int = 32,
+        stream_seed: Optional[int] = None,
+        start_step: int = 0,
+        ckpt_every: int = 0,
+        eval_every_epochs: int = 0,
+        warmup_epochs: int = 1,
+        log_every: int = 0,
+    ):
+        """Run ``epochs`` of neighbor-sampled SGD; returns
+        ``(state, stats)``. ``start_step`` (a global step, e.g. from
+        ``resume``) may land mid-epoch — the stream replays the exact
+        remaining batches of that epoch."""
+        stream = EpochSeedStream(
+            self.train_ids, batch_size,
+            seed=self.engine.cfg.seed if stream_seed is None else stream_seed)
+        bpe = stream.batches_per_epoch
+        total_steps = epochs * bpe
+        if start_step >= total_steps:
+            raise ValueError(f"start_step {start_step} beyond "
+                             f"{epochs} epochs x {bpe} batches")
+        # warmup is counted from this run's first step: a resumed run has a
+        # fresh executor whose first-time bucket compiles are expected, not
+        # retraces
+        warmup_steps = start_step + min(warmup_epochs * bpe,
+                                        total_steps - start_step)
+
+        loader = self.engine.make_loader(
+            stream, start_step=start_step,
+            num_batches=total_steps - start_step, depth=self.prefetch_depth,
+            cache_blocks=0, cache_layouts=self.cache_layouts)
+
+        ex = self.step_exec
+        losses: List[float] = []
+        accs: List[float] = []
+        step_times: List[float] = []
+        evals: List[Dict] = []
+        traces_at_warmup = None
+        t_train0 = time.perf_counter()
+        try:
+            for mb in loader:
+                step = mb.step
+                if traces_at_warmup is None and step >= warmup_steps:
+                    traces_at_warmup = ex.trace_count
+                labels_b = jnp.asarray(mb.seq.slice_labels(self.labels))
+                feats_b = {"feature": self.feats[mb.input_ids]}
+                t0 = time.perf_counter()
+                state, metrics = ex.grad_and_update(
+                    state, mb, labels_b, feats_b)
+                loss = float(metrics["loss"])   # syncs the step
+                step_times.append(time.perf_counter() - t0)
+                losses.append(loss)
+                accs.append(float(metrics["accuracy"]))
+                if log_every and (step + 1) % log_every == 0:
+                    self.log(f"[train_rgnn] step {step+1:5d} "
+                             f"loss {loss:.4f} acc {accs[-1]:.2%} "
+                             f"({step_times[-1]*1e3:.1f} ms)")
+                if self.ckpt is not None and ckpt_every \
+                        and (step + 1) % ckpt_every == 0:
+                    self.ckpt.save(step + 1, state)
+                epoch_done = (step + 1) % bpe == 0
+                if epoch_done:
+                    epoch = (step + 1) // bpe
+                    span = losses[-min(len(losses), bpe):]
+                    self.log(f"[train_rgnn] epoch {epoch}/{epochs}: "
+                             f"mean loss {np.mean(span):.4f}")
+                    if eval_every_epochs and epoch % eval_every_epochs == 0:
+                        evals.append(self._periodic_eval(state, epoch))
+        finally:
+            loader.close()
+        t_total = time.perf_counter() - t_train0
+        if traces_at_warmup is None:
+            traces_at_warmup = ex.trace_count
+        if self.ckpt is not None:
+            self.ckpt.wait()
+
+        n = len(losses)
+        stats = {
+            "steps": n,
+            "start_step": start_step,
+            "batches_per_epoch": bpe,
+            "epochs": epochs,
+            "batch_size": stream.batch_size,
+            "losses": losses,
+            "accuracies": accs,
+            "final_loss": losses[-1] if losses else float("nan"),
+            "step_ms_p50": float(np.percentile(step_times, 50) * 1e3)
+            if step_times else float("nan"),
+            "seeds_per_s": stream.batch_size * n / max(t_total, 1e-9),
+            "executor_traces": ex.trace_count,
+            "executor_cache_hits": ex.cache_hits,
+            "executor_compiled": ex.num_compiled,
+            "retraces_after_warmup": ex.trace_count - traces_at_warmup,
+            "warmup_steps": warmup_steps,
+            "evals": evals,
+        }
+        for name, cs in loader.cache_stats().items():
+            stats[f"{name}_hits"] = cs["hits"]
+            stats[f"{name}_misses"] = cs["misses"]
+        return state, stats
+
+    # ------------------------------------------------------------------
+    def _periodic_eval(self, state: TrainState, epoch: int) -> Dict:
+        out = {"epoch": epoch}
+        ids = self.val_ids if self.val_ids is not None else self.train_ids
+        split = "val" if self.val_ids is not None else "train"
+        full = self.full.evaluate(state.params, ids)
+        out[f"full_{split}"] = full
+        sampled = self.evaluate_sampled(state.params, ids, epoch=epoch)
+        out[f"sampled_{split}"] = sampled
+        self.log(f"[train_rgnn]   eval@{epoch}: full-graph {split} "
+                 f"loss {full['loss']:.4f} acc {full['accuracy']:.2%} | "
+                 f"sampled loss {sampled['loss']:.4f} "
+                 f"acc {sampled['accuracy']:.2%}")
+        return out
+
+    def evaluate_sampled(self, params, ids, *, batch_size: int = 64,
+                         epoch: int = 0) -> Dict[str, float]:
+        """Sampled-forward accuracy/loss over ``ids`` using the engine's
+        fanout config (batched, in id order, fresh neighborhoods)."""
+        ids = np.asarray(ids, dtype=np.int32)
+        cfg = self.engine.cfg
+        tot_loss, tot_acc, nb = 0.0, 0.0, 0
+        for lo in range(0, len(ids), batch_size):
+            chunk = ids[lo:lo + batch_size]
+            seq = self.engine.sampler.sample(chunk, batch_index=lo,
+                                             epoch=epoch)
+            mb = build_minibatch(seq, step=lo, tile=cfg.tile,
+                                 node_block=cfg.node_block, bucket=cfg.bucket)
+            logits = self.engine.forward_minibatch(params, mb, self.feats)
+            loss, acc = executor.softmax_xent(
+                logits, jnp.asarray(self.labels[chunk]))
+            tot_loss += float(loss) * len(chunk)
+            tot_acc += float(acc) * len(chunk)
+            nb += len(chunk)
+        return {"loss": tot_loss / max(nb, 1),
+                "accuracy": tot_acc / max(nb, 1)}

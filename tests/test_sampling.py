@@ -317,6 +317,42 @@ def test_loader_block_cache_zero_rebuilds_on_repeats(graph, feats):
         np.testing.assert_array_equal(outs[i], outs[i % distinct])
 
 
+def test_loader_block_cache_epoch_keyed_for_training_streams(graph):
+    """Regression (ISSUE 3 satellite): the sampled-block LRU used to be
+    keyed by (seeds, fanout) only, so a training stream revisiting the same
+    seed batch in a later epoch would silently replay the *identical*
+    cached blocks — destroying neighbor-sampling stochasticity. With an
+    epoch-aware seed source the key (and the sampler rng) includes the
+    epoch: same seeds, later epoch -> fresh sample, zero cache hits."""
+    from benchmarks.train_sampled import check_fresh_blocks_per_epoch
+
+    failures = []
+    check_fresh_blocks_per_epoch(failures)   # shared with the CI gate
+    assert failures == []
+
+    # serving streams (no epoch_of) keep the replay semantics: same seeds
+    # at a later step return the cached block
+    seeds = np.arange(24, dtype=np.int32)
+    sampler = FanoutSampler(graph, [3, 3], seed=2)
+    loader = MiniBatchLoader(sampler, lambda step: seeds, tile=8,
+                             node_block=8, bucket=True, num_batches=3,
+                             cache_blocks=8)
+    try:
+        batches = list(loader)
+        stats = loader.cache_stats()["block_cache"]
+    finally:
+        loader.close()
+
+    def edges(mb):
+        b = mb.seq.blocks[0]
+        return set(zip(b.node_ids[b.graph.src].tolist(),
+                       b.node_ids[b.graph.dst].tolist(),
+                       b.graph.etype.tolist()))
+
+    assert stats["hits"] == 2 and stats["misses"] == 1
+    assert edges(batches[0]) == edges(batches[1]) == edges(batches[2])
+
+
 # ---------------------------------------------------------------------------
 # serving driver
 # ---------------------------------------------------------------------------
