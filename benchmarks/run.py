@@ -1,10 +1,10 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--only ...] [--json PATH]
 
 fig8   — Hector vs vanilla baselines (Fig. 8 / Table 4)
-table5 — compaction / reordering ablation (Table 5)
+table5 — compaction / reordering ablation (Table 5) + autotuned column
 fig9   — op-category breakdown (Fig. 3 / Fig. 9)
 fig10  — memory footprint & compaction ratio (Fig. 10)
 fig11  — hidden-dim sweep (Fig. 11)
@@ -12,22 +12,58 @@ loc    — LoC report (§4.1)
 serve  — sampled mini-batch serving vs full-graph inference
 serve_cached — cache-hit-rate + per-batch latency of the cached serving path
 train_sampled — neighbor-sampled training step latency / epoch throughput
+tune_smoke — autotuner cold/warm persistent-cache invariants
+
+``--json PATH`` (e.g. ``--json BENCH_table5.json``) additionally writes the
+rows machine-readably — ``{"name", "us_per_call", "derived": {k: v}}`` —
+so the perf trajectory is trackable across PRs without re-parsing CSV.
 """
 import argparse
+import json
 import sys
+
+
+def parse_csv_row(line: str):
+    """``name,us,k=v;k=v`` -> row dict (None if the line is not a row)."""
+    parts = line.strip().split(",", 2)
+    if len(parts) < 2:
+        return None
+    name, us = parts[0], parts[1]
+    try:
+        us_val = float(us)
+    except ValueError:
+        return None
+    derived = {}
+    if len(parts) == 3 and parts[2]:
+        for item in parts[2].split(";"):
+            if "=" in item:
+                k, v = item.split("=", 1)
+                derived[k] = v
+    return {"name": name, "us_per_call": us_val, "derived": derived}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,table5,fig9,fig10,fig11,loc,"
-                         "serve,serve_cached,train_sampled")
+                         "serve,serve_cached,train_sampled,tune_smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (e.g. BENCH_all.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig8_speedup, fig9_breakdown, fig10_memory,
                             fig11_dims, loc_report, serve_cached,
-                            serve_sampled, table5_opts, train_sampled)
+                            serve_sampled, table5_opts, train_sampled,
+                            tune_smoke)
+
+    rows = []
+
+    def emit(line) -> None:
+        print(line)
+        row = parse_csv_row(str(line))
+        if row is not None:
+            rows.append(row)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -40,15 +76,28 @@ def main() -> None:
         ("serve", serve_sampled.run),
         ("serve_cached", serve_cached.run),
         ("train_sampled", train_sampled.run),
+        ("tune_smoke", tune_smoke.run),
     ]
     for name, fn in jobs:
         if only and name not in only:
             continue
         try:
-            fn()
+            fn(out=emit)
         except Exception as e:  # noqa: BLE001
             print(f"{name},ERROR,{e!r}", file=sys.stderr)
             raise
+
+    if args.json:
+        import jax
+        payload = {
+            "schema_version": 1,
+            "backend": jax.default_backend(),
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[run] wrote {len(rows)} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

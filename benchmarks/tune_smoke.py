@@ -1,0 +1,93 @@
+"""Autotuner persistent-cache smoke: tune once cold, rerun warm.
+
+Runs the serving driver twice with ``--tune full`` against the same
+persistent cache file:
+
+* the cold run must actually measure (the tuner's whole point), and
+* the warm run must replay **every** decision from the cache — zero
+  on-device measurements — and serve its steady state with zero retraces
+  after warmup (the tuned decision table is part of the executor
+  compile-cache key, so replayed decisions hit warm executables).
+
+``--ci`` turns the invariants into hard assertions (a CI step, like
+``serve_cached --ci``).
+
+    PYTHONPATH=src python -m benchmarks.tune_smoke --ci
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+from benchmarks.common import csv_row
+
+
+def _quiet(*a, **k):
+    pass
+
+
+def run(out=print, ci: bool = False, dataset: str = "aifb",
+        tune_cache=None):
+    from repro.core.graph import CPU_REDUCED_SCALES
+    from repro.launch.serve_rgnn import serve
+
+    if tune_cache is None:
+        tmpdir = tempfile.mkdtemp(prefix="repro-tune-smoke-")
+        tune_cache = os.path.join(tmpdir, "tune.json")
+
+    kwargs = dict(
+        model="rgat", dataset=dataset, scale=CPU_REDUCED_SCALES[dataset],
+        layers=2, dim=32, hidden=32, classes=8, batch_size=16,
+        num_batches=6, repeat_after=2, cache_blocks=8, cache_layouts=32,
+        tune="full", tune_cache=tune_cache, log=_quiet,
+    )
+
+    t0 = time.perf_counter()
+    cold = serve(**kwargs)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = serve(**kwargs)
+    t_warm = time.perf_counter() - t0
+
+    out(csv_row("tune_smoke/cold", t_cold,
+                f"measurements={cold['tune_measurements']}"
+                f";tuned_ops={cold['tune_tuned_ops']}"
+                f";retraces={cold['retraces_after_warmup']}"))
+    out(csv_row("tune_smoke/warm", t_warm,
+                f"measurements={warm['tune_measurements']}"
+                f";cache_replays={warm['tune_cache_hits']}"
+                f";retraces={warm['retraces_after_warmup']}"))
+
+    if ci:
+        assert cold["tune_measurements"] > 0, \
+            f"cold tuning measured nothing: {cold}"
+        assert warm["tune_measurements"] == 0, \
+            f"warm run re-measured despite persistent cache: " \
+            f"{warm['tune_measurements']}"
+        assert warm["tune_cache_hits"] >= cold["tune_tuned_ops"], \
+            (warm["tune_cache_hits"], cold["tune_tuned_ops"])
+        assert warm["retraces_after_warmup"] == 0, \
+            f"tuned serving retraced after warmup: " \
+            f"{warm['retraces_after_warmup']}"
+        print("[tune_smoke] CI assertions passed: cold run measured "
+              f"{cold['tune_measurements']}x, warm run replayed "
+              f"{warm['tune_cache_hits']} decisions with 0 measurements "
+              "and 0 retraces after warmup")
+    return cold, warm
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="assert the cold/warm invariants")
+    ap.add_argument("--dataset", default="aifb")
+    ap.add_argument("--tune-cache", default=None,
+                    help="cache path (default: fresh temp file)")
+    args = ap.parse_args(argv)
+    run(ci=args.ci, dataset=args.dataset, tune_cache=args.tune_cache)
+
+
+if __name__ == "__main__":
+    main()

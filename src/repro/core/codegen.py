@@ -30,6 +30,8 @@ from repro.core.ir import inter_op as I
 from repro.core.ir import intra_op as O
 from repro.kernels import layout as L
 from repro.kernels import ops as K
+from repro.tune import device as tunedev
+from repro.tune import space as tspace
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -201,8 +203,14 @@ def execute_plan(
     feats: Dict[str, jnp.ndarray],
     kl: KernelLayouts,
     backend: str = "xla",
+    decisions=None,
 ) -> Dict[str, jnp.ndarray]:
-    """Run the lowered layer. Returns {output name: array}."""
+    """Run the lowered layer. Returns {output name: array}.
+
+    ``decisions`` is an optional ``tune.TuningDecisions`` table; op
+    instances found in it dispatch on the recorded variant (backend, tile
+    shape, gather fusion) instead of the hardcoded defaults.
+    """
     env = _Env(plan, gt, params, feats)
     derived: Dict[str, jnp.ndarray] = {}
 
@@ -215,9 +223,9 @@ def execute_plan(
             # (x W_r) · w_r == x (W_r w_r^T): hoisted weight-weight BMM
             derived[op.out] = jnp.einsum("rdf,rf->rd", wm, wv)[..., None]
         elif isinstance(op, O.GemmSpec):
-            _exec_gemm(op, env, weight, gt, kl, backend)
+            _exec_gemm(op, env, weight, gt, kl, backend, decisions)
         elif isinstance(op, O.TraversalSpec):
-            _exec_traversal(op, env, gt, kl, backend)
+            _exec_traversal(op, env, gt, kl, backend, decisions)
         elif isinstance(op, O.FallbackSpec):
             raise NotImplementedError(
                 f"fallback op {op.stmt} reached the executor; add a jnp "
@@ -248,6 +256,7 @@ def execute_block_sequence(
     feats: Dict[str, jnp.ndarray],  # features for the first block's node set
     backend: str = "xla",
     activation: str = "relu",
+    decisions=None,
 ) -> jnp.ndarray:
     """Run one lowered layer per sampled hop, narrowing to each hop's output
     frontier, and gather the requested seed rows from the last hop.
@@ -266,7 +275,7 @@ def execute_block_sequence(
     h = None
     last = len(plans) - 1
     for i, (plan, p, gt, kl) in enumerate(zip(plans, params, gts, kls)):
-        out = execute_plan(plan, p, gt, cur, kl, backend)
+        out = execute_plan(plan, p, gt, cur, kl, backend, decisions)
         h = out[plan.outputs[0]][dst_locals[i]]
         if i < last:
             cur = {"feature": act(h)}
@@ -278,19 +287,37 @@ def execute_block_sequence(
 _FUSABLE_GATHERS = (O.GatherScheme.BY_EDGE_SRC, O.GatherScheme.BY_EDGE_DST,
                     O.GatherScheme.BY_UNIQUE_SRC)
 
-# The gather-fused kernels keep the whole ungathered source block resident
-# in VMEM (constant index_map). Sampled serving blocks are small, but a
-# full-graph source table can exceed VMEM (~16 MiB/core), so sources above
-# this budget fall back to the materialized-gather kernels.
-FUSED_GATHER_MAX_SOURCE_BYTES = 4 * 1024 * 1024
+
+def _fits_vmem(arr, *index_arrays) -> bool:
+    """Default gather-fusion heuristic: the ungathered source block PLUS the
+    scalar-prefetched gather/slot-map index arrays must all stay resident in
+    VMEM, inside the budget derived from the device's actual VMEM size
+    (``tune/device.py``; overridable via env)."""
+    total = arr.size * arr.dtype.itemsize
+    for ix in index_arrays:
+        if ix is not None:
+            total += ix.size * ix.dtype.itemsize
+    return total <= tunedev.fused_gather_budget_bytes()
 
 
-def _fits_vmem(arr) -> bool:
-    return arr.size * arr.dtype.itemsize <= FUSED_GATHER_MAX_SOURCE_BYTES
+def _gemm_decision(decisions, op, lay, x_src, w, has_scale):
+    if decisions is None or lay is None:
+        return None
+    key = tspace.gemm_key(op, lay, int(x_src.shape[0]), int(w.shape[-2]),
+                          int(w.shape[-1]), has_scale, x_src.dtype)
+    return decisions.lookup(key)
+
+
+def _trav_decision(decisions, kind, msg, compact_msg, kl):
+    if decisions is None:
+        return None
+    key = tspace.trav_key(kind, int(msg.shape[-1]), compact_msg, kl.blocked,
+                          msg.dtype)
+    return decisions.lookup(key)
 
 
 def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,
-               kl: KernelLayouts, backend: str):
+               kl: KernelLayouts, backend: str, decisions=None):
     w = weight(op.weight)
 
     scale = None
@@ -299,51 +326,66 @@ def _exec_gemm(op: O.GemmSpec, env: _Env, weight, gt: GraphTensors,
         if scale.ndim == 2:
             scale = scale[:, 0]
 
-    # Pallas backends with a typed GEMM: fold the access-scheme gather into
-    # the kernel via the padded gather-index layout — the [rows, k] input
-    # copy is never materialized outside the kernel (paper §3.3).
-    if (backend != "xla" and op.type_index != O.TypeIndex.NONE
-            and op.gather in _FUSABLE_GATHERS
-            and _fits_vmem(env.get(op.x_source))):
-        gmap, lay = {
-            O.GatherScheme.BY_EDGE_SRC: (kl.edge_src_rows, kl.edge_seg),
-            O.GatherScheme.BY_EDGE_DST: (kl.edge_dst_rows, kl.edge_seg),
-            O.GatherScheme.BY_UNIQUE_SRC: (kl.unique_src_rows, kl.unique_seg),
-        }[op.gather]
-        y = K.segment_mm_gather(env.get(op.x_source), w, lay, gmap,
-                                row_scale=scale, backend=backend)
-        out = y[:, 0] if (op.out_cols == 1 and y.shape[-1] == 1) else y
-        env.set(op.out, out)
-        return
-
-    # resolve X via the gather scheme (materialized; XLA fuses the gather)
+    # resolve the access scheme: layout, padded gather map, gather list
     if op.gather == O.GatherScheme.BY_EDGE_SRC:
-        x = env.get(op.x_source)[gt.src]
-        lay = kl.edge_seg
+        lay, gmap, gidx = kl.edge_seg, kl.edge_src_rows, gt.src
+        x_src = env.get(op.x_source)
     elif op.gather == O.GatherScheme.BY_EDGE_DST:
-        x = env.get(op.x_source)[gt.dst]
-        lay = kl.edge_seg
+        lay, gmap, gidx = kl.edge_seg, kl.edge_dst_rows, gt.dst
+        x_src = env.get(op.x_source)
     elif op.gather == O.GatherScheme.BY_UNIQUE_SRC:
-        x = env.get(op.x_source)[gt.unique_src]
-        lay = kl.unique_seg
+        lay, gmap, gidx = kl.unique_seg, kl.unique_src_rows, gt.unique_src
+        x_src = env.get(op.x_source)
     elif op.gather == O.GatherScheme.BY_NODE:
-        x = env.get(op.x_source)
-        lay = kl.node_seg
+        lay, gmap, gidx = kl.node_seg, None, None
+        x_src = env.get(op.x_source)
     else:  # IDENTITY: var already in segment-sorted order
-        x = env.get(op.x_source.split(":", 1)[1]
-                    if op.x_source.startswith("edge:") else op.x_source)
+        x_src = env.get(op.x_source.split(":", 1)[1]
+                        if op.x_source.startswith("edge:") else op.x_source)
         lay = {
             "etype_ptr": kl.edge_seg,
             "unique_etype_ptr": kl.unique_seg,
             "ntype_ptr": kl.node_seg,
         }.get(op.seg_ptr)
+        gmap = gidx = None
 
-    if op.type_index == O.TypeIndex.NONE:
+    typed = op.type_index != O.TypeIndex.NONE
+    dec = _gemm_decision(decisions, op, lay, x_src, w, scale is not None) \
+        if typed else None
+    backend_eff = backend
+    tile_rows = tile_n = None
+    if dec is not None:
+        if dec.backend != tspace.DEFAULT:
+            backend_eff = dec.backend
+        tile_rows, tile_n = dec.tile_rows, dec.tile_n
+
+    # Pallas backends with a typed GEMM: fold the access-scheme gather into
+    # the kernel via the padded gather-index layout — the [rows, k] input
+    # copy is never materialized outside the kernel (paper §3.3). The tuned
+    # decision overrides the VMEM-budget heuristic either way.
+    if (backend_eff != "xla" and typed and gmap is not None
+            and op.gather in _FUSABLE_GATHERS):
+        fuse = (dec.fuse_gather
+                if dec is not None and dec.fuse_gather is not None
+                else _fits_vmem(x_src, gmap))
+        if fuse:
+            y = K.segment_mm_gather(x_src, w, lay, gmap, row_scale=scale,
+                                    backend=backend_eff,
+                                    tile_n=tile_n or 128,
+                                    tile_rows=tile_rows)
+            out = y[:, 0] if (op.out_cols == 1 and y.shape[-1] == 1) else y
+            env.set(op.out, out)
+            return
+
+    # materialized gather (XLA fuses the gather into the consumer)
+    x = x_src if gidx is None else x_src[gidx]
+    if not typed:
         y = x @ w
         if scale is not None:
             y = y * scale[:, None]
     else:
-        y = K.segment_mm(x, w, lay, row_scale=scale, backend=backend)
+        y = K.segment_mm(x, w, lay, row_scale=scale, backend=backend_eff,
+                         tile_n=tile_n or 128, tile_rows=tile_rows)
     out = y[:, 0] if (op.out_cols == 1 and y.shape[-1] == 1) else y
     env.set(op.out, out)
 
@@ -360,7 +402,7 @@ def _edge_msg(env: _Env, gt: GraphTensors, kl: KernelLayouts, name: str):
 
 
 def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
-                    kl: KernelLayouts, backend: str):
+                    kl: KernelLayouts, backend: str, decisions=None):
     """Execute a fused traversal region, fusing the canonical softmax(+agg)
     pattern onto the Pallas traversal kernel when present."""
     stmts = op.stmts
@@ -381,20 +423,29 @@ def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
                 nxt is not None
                 and nxt.kind == "segment_sum"
                 and nxt.scale == att_name
-                and backend != "xla"
             ):
-                # fully fused softmax+aggregate traversal kernel
                 msg, msg_rows, slot_map = _edge_msg(env, gt, kl, nxt.ins[0])
-                out = K.edge_softmax_agg(
-                    scores, msg, gt.dst, gt.num_nodes,
-                    bc=kl.blocked, backend=backend,
-                    msg_rows=msg_rows, msg_slot_map=slot_map,
-                    fuse_gather=_fits_vmem(msg),
-                )
-                env.set(nxt.out, out)
-                env.set(att_name, K.edge_softmax(scores, gt.dst, gt.num_nodes))
-                i += 8
-                continue
+                dec = _trav_decision(decisions, "softmax_agg", msg,
+                                     msg_rows is not None, kl)
+                backend_eff = backend
+                if dec is not None and dec.backend != tspace.DEFAULT:
+                    backend_eff = dec.backend
+                if backend_eff != "xla":
+                    # fully fused softmax+aggregate traversal kernel
+                    fuse = (dec.fuse_gather
+                            if dec is not None and dec.fuse_gather is not None
+                            else _fits_vmem(msg, slot_map))
+                    out = K.edge_softmax_agg(
+                        scores, msg, gt.dst, gt.num_nodes,
+                        bc=kl.blocked, backend=backend_eff,
+                        msg_rows=msg_rows, msg_slot_map=slot_map,
+                        fuse_gather=fuse,
+                    )
+                    env.set(nxt.out, out)
+                    env.set(att_name,
+                            K.edge_softmax(scores, gt.dst, gt.num_nodes))
+                    i += 8
+                    continue
             env.set(att_name, K.edge_softmax(scores, gt.dst, gt.num_nodes))
             i += 7
             continue
@@ -427,15 +478,23 @@ def _exec_traversal(op: O.TraversalSpec, env: _Env, gt: GraphTensors,
             env.set(s.out, jnp.where(jnp.isfinite(mx), mx, 0.0))
         elif s.kind == "segment_sum":
             msg, msg_rows, slot_map = _edge_msg(env, gt, kl, s.ins[0])
+            dec = _trav_decision(decisions, "weighted_agg", msg,
+                                 msg_rows is not None, kl)
+            backend_eff = backend
+            if dec is not None and dec.backend != tspace.DEFAULT:
+                backend_eff = dec.backend
+            fuse = (dec.fuse_gather
+                    if dec is not None and dec.fuse_gather is not None
+                    else _fits_vmem(msg, slot_map))
             scale = None
             if s.scale is not None:
                 scale = env.get_edge_vanilla(s.scale)
                 if scale.ndim == 2:
                     scale = scale[:, 0]
             out = K.weighted_agg(scale, msg, gt.dst, gt.num_nodes,
-                                 bc=kl.blocked, backend=backend,
+                                 bc=kl.blocked, backend=backend_eff,
                                  msg_rows=msg_rows, msg_slot_map=slot_map,
-                                 fuse_gather=_fits_vmem(msg))
+                                 fuse_gather=fuse)
             if s.op == "mean":
                 deg = kl.dst_deg.astype(out.dtype)
                 out = out / jnp.maximum(deg, 1.0)[:, None]

@@ -47,22 +47,37 @@ def _donation_supported() -> bool:
 
 
 class _CachedExecutor:
-    """Shared machinery: explicit signature -> jitted-callable cache."""
+    """Shared machinery: explicit signature -> jitted-callable cache.
 
-    def __init__(self, donate: bool, donate_argnums: Sequence[int]):
+    ``decisions`` (a ``tune.TuningDecisions`` table, or None) is closed over
+    by the traced function AND its fingerprint joins the cache key: swapping
+    in a new table after (re)tuning can never reuse an executable compiled
+    for the old variants.
+    """
+
+    def __init__(self, donate: bool, donate_argnums: Sequence[int],
+                 decisions=None):
         self._cache: Dict[tuple, object] = {}
         self._donate = donate and _donation_supported()
         self._donate_argnums = tuple(donate_argnums)
+        self.decisions = decisions
         self.cache_hits = 0
         self.cache_misses = 0
         self.trace_count = 0   # incremented inside the traced fn: counts
         #                        actual (re)traces, not cache bookkeeping
 
+    def set_decisions(self, decisions) -> None:
+        """Install a (new) tuning-decision table; subsequent calls compile
+        fresh entries under its fingerprint."""
+        self.decisions = decisions
+
     def _traced(self, *args):
         raise NotImplementedError
 
     def _call(self, *args):
-        key = signature(args)
+        fp = self.decisions.fingerprint() if self.decisions is not None \
+            else None
+        key = (fp,) + signature(args)
         fn = self._cache.get(key)
         if fn is None:
             self.cache_misses += 1
@@ -99,15 +114,16 @@ class PlanExecutor(_CachedExecutor):
     """
 
     def __init__(self, plan, backend: str = "xla",
-                 donate_feats: bool = False):
-        super().__init__(donate_feats, donate_argnums=(3,))
+                 donate_feats: bool = False, decisions=None):
+        super().__init__(donate_feats, donate_argnums=(3,),
+                         decisions=decisions)
         self.plan = plan
         self.backend = backend
 
     def _traced(self, params, gt, kl, feats):
         self.trace_count += 1
         return codegen.execute_plan(self.plan, params, gt, feats, kl,
-                                    self.backend)
+                                    self.backend, self.decisions)
 
     def __call__(self, params, gt, kl, feats) -> Dict[str, jnp.ndarray]:
         return self._call(params, gt, kl, feats)
@@ -123,8 +139,10 @@ class BlockExecutor(_CachedExecutor):
     """
 
     def __init__(self, plans: Sequence, backend: str = "xla",
-                 activation: str = "relu", donate_feats: bool = True):
-        super().__init__(donate_feats, donate_argnums=(5,))
+                 activation: str = "relu", donate_feats: bool = True,
+                 decisions=None):
+        super().__init__(donate_feats, donate_argnums=(5,),
+                         decisions=decisions)
         self.plans = list(plans)
         self.backend = backend
         self.activation = activation
@@ -133,7 +151,8 @@ class BlockExecutor(_CachedExecutor):
         self.trace_count += 1
         return codegen.execute_block_sequence(
             self.plans, params, gts, kls, dst_locals, seed_perm, feats,
-            backend=self.backend, activation=self.activation)
+            backend=self.backend, activation=self.activation,
+            decisions=self.decisions)
 
     def __call__(self, params: Sequence[Dict[str, jnp.ndarray]],
                  gts: List, kls: List, dst_locals: List,
@@ -177,9 +196,11 @@ class BlockTrainExecutor(_CachedExecutor):
     """
 
     def __init__(self, plans: Sequence, opt, backend: str = "xla",
-                 activation: str = "relu", donate_state: bool = True):
+                 activation: str = "relu", donate_state: bool = True,
+                 decisions=None):
         # argnums in _traced order: 0=state, 6=feats
-        super().__init__(donate_state, donate_argnums=(0, 6))
+        super().__init__(donate_state, donate_argnums=(0, 6),
+                         decisions=decisions)
         self.plans = list(plans)
         self.opt = opt
         self.backend = backend
@@ -191,7 +212,8 @@ class BlockTrainExecutor(_CachedExecutor):
         def loss_fn(params):
             logits = codegen.execute_block_sequence(
                 self.plans, params, gts, kls, dst_locals, seed_perm, feats,
-                backend=self.backend, activation=self.activation)
+                backend=self.backend, activation=self.activation,
+                decisions=self.decisions)
             return softmax_xent(logits, labels)
 
         (loss, acc), grads = jax.value_and_grad(
@@ -223,8 +245,10 @@ class StackTrainExecutor(_CachedExecutor):
     """
 
     def __init__(self, plans: Sequence, opt, backend: str = "xla",
-                 activation: str = "relu", donate_state: bool = True):
-        super().__init__(donate_state, donate_argnums=(0,))
+                 activation: str = "relu", donate_state: bool = True,
+                 decisions=None):
+        super().__init__(donate_state, donate_argnums=(0,),
+                         decisions=decisions)
         self.plans = list(plans)
         self.opt = opt
         self.backend = backend
@@ -237,7 +261,8 @@ class StackTrainExecutor(_CachedExecutor):
         h = None
         last = len(self.plans) - 1
         for i, (plan, p) in enumerate(zip(self.plans, params)):
-            out = codegen.execute_plan(plan, p, gt, cur, kl, self.backend)
+            out = codegen.execute_plan(plan, p, gt, cur, kl, self.backend,
+                                       self.decisions)
             h = out[plan.outputs[0]]
             if i < last:
                 cur = {"feature": act(h)}
@@ -259,6 +284,10 @@ class StackTrainExecutor(_CachedExecutor):
         """One full-graph optimizer step; loss is taken over the ``idx``
         node rows (the training split)."""
         return self._call(state, gt, kl, idx, labels, feats)
+
+    def set_decisions(self, decisions) -> None:
+        super().set_decisions(decisions)
+        self._eval_fn = None   # compiled under the old decision table
 
     # -- compiled evaluation (no update) ---------------------------------
     def _traced_eval(self, params, gt, kl, idx, labels, feats):

@@ -21,7 +21,7 @@ Implemented passes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Collection, Dict, List, Optional, Tuple
 
 from repro.core.ir import inter_op as I
 from repro.core.ir import intra_op as O
@@ -99,13 +99,23 @@ def reorder_linear_ops(prog: I.Program) -> Tuple[I.Program, List[O.WeightProduct
 # ---------------------------------------------------------------------------
 # compact materialization (§3.2.2)
 # ---------------------------------------------------------------------------
-def apply_compact_materialization(prog: I.Program) -> I.Program:
+def apply_compact_materialization(
+    prog: I.Program, only: Optional[Collection[str]] = None
+) -> I.Program:
     """Mark compactable edgewise variables with the COMPACT layout.
 
     Paper applicability condition (§3.2.2): the edgewise operator depends
     only on (source node, edge type) AND its output has shape
     (num_edges, hidden) — i.e. it is a materialized GEMM-template output
     (typed linear), not a scalar traversal product.
+
+    ``only`` restricts the marking to a chosen subset of the eligible vars
+    — the per-variable materialization decision of the autotuner (the paper
+    applies compaction all-or-nothing per model; Table 5 shows the best
+    choice varies, so the tuner decides per variable). Vars outside
+    ``only`` stay VANILLA, and a var whose compactable *inputs* were left
+    VANILLA is itself no longer eligible (its reads go through per-edge
+    rows).
     """
     prog = prog.clone()
     compact_vars: set = set()
@@ -114,10 +124,32 @@ def apply_compact_materialization(prog: I.Program) -> I.Program:
             isinstance(s, I.EdgeCompute)
             and isinstance(s.expr, I.TypedLinear)
             and I.compactable(s.expr, compact_vars)
+            and (only is None or s.out in only)
         ):
             prog.layouts[s.out] = I.Layout.COMPACT
             compact_vars.add(s.out)
     return prog
+
+
+def compactable_edge_vars(prog: I.Program, reorder: bool = True) -> List[str]:
+    """Names of the edge vars ``lower_program`` *could* mark COMPACT, after
+    the same pre-passes it would run (so the names line up with the plan the
+    autotuner will lower). The tuner enumerates its per-var materialization
+    space from this list."""
+    if reorder:
+        prog, _ = reorder_linear_ops(prog)
+    prog = flatten_gemms(prog)
+    names: List[str] = []
+    compact_vars: set = set()
+    for s in prog.stmts:
+        if (
+            isinstance(s, I.EdgeCompute)
+            and isinstance(s.expr, I.TypedLinear)
+            and I.compactable(s.expr, compact_vars)
+        ):
+            names.append(s.out)
+            compact_vars.add(s.out)
+    return names
 
 
 # ---------------------------------------------------------------------------
@@ -379,15 +411,23 @@ def lower_program(
     prog: I.Program,
     reorder: bool = True,
     compact: bool = True,
+    compact_vars: Optional[Collection[str]] = None,
 ) -> O.Plan:
-    """Full §3.2.5 pipeline: optimize, canonicalize, 3-pass greedy lowering."""
+    """Full §3.2.5 pipeline: optimize, canonicalize, 3-pass greedy lowering.
+
+    ``compact_vars`` (from the autotuner's materialization decisions)
+    overrides the all-or-nothing ``compact`` flag with an explicit per-var
+    COMPACT set; names must come from ``compactable_edge_vars``.
+    """
     weights = dict(prog.weights())
     wprods: List[O.WeightProductSpec] = []
     if reorder:
         prog, wprods = reorder_linear_ops(prog)
         weights.update(prog.weights())
     prog = flatten_gemms(prog)
-    if compact:
+    if compact_vars is not None:
+        prog = apply_compact_materialization(prog, only=compact_vars)
+    elif compact:
         prog = apply_compact_materialization(prog)
     prog = canonicalize(prog)
     layouts = dict(prog.layouts)

@@ -28,16 +28,22 @@ class HectorModule:
         *,
         reorder: bool = True,
         compact: bool = True,
+        compact_vars=None,
         backend: str = "xla",
         tile: int = 128,
         node_block: int = 128,
         jit: bool = True,
         gt=None,
         layouts: Optional[codegen.KernelLayouts] = None,
+        decisions=None,
     ):
         self.program = program
         self.graph = graph
-        self.plan = lower_program(program, reorder=reorder, compact=compact)
+        # compact_vars (per-var materialization) and decisions (per-op
+        # variants) come from the autotuner; both default to the paper's
+        # static policies when absent
+        self.plan = lower_program(program, reorder=reorder, compact=compact,
+                                  compact_vars=compact_vars)
         # gt/layouts may be shared across modules over the same graph
         # (HectorStack builds them once for all layers)
         self.gt = graph.to_tensors() if gt is None else gt
@@ -45,10 +51,11 @@ class HectorModule:
             codegen.build_kernel_layouts(graph, tile=tile,
                                          node_block=node_block)
         self.backend = backend
+        self.decisions = decisions
         # whole-plan compiled executor: graph tensors and layouts flow in as
         # pytree arguments, fronted by an explicit compile cache
-        self.executor = executor.PlanExecutor(self.plan, backend=backend) \
-            if jit else None
+        self.executor = executor.PlanExecutor(
+            self.plan, backend=backend, decisions=decisions) if jit else None
 
     # ------------------------------------------------------------------
     def init(self, key: jax.Array, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
@@ -58,7 +65,8 @@ class HectorModule:
         if self.executor is not None:
             return self.executor(params, self.gt, self.layouts, feats)
         return codegen.execute_plan(
-            self.plan, params, self.gt, feats, self.layouts, self.backend
+            self.plan, params, self.gt, feats, self.layouts, self.backend,
+            self.decisions
         )
 
     def describe(self) -> str:
@@ -92,33 +100,43 @@ class HectorStack:
         *,
         reorder: bool = True,
         compact: bool = True,
+        compact_vars: Optional[Sequence] = None,   # per-layer COMPACT sets
         backend: str = "xla",
         tile: int = 128,
         node_block: int = 128,
         activation: str = "relu",
         jit: bool = True,
+        decisions=None,
     ):
         if not programs:
             raise ValueError("need at least one layer program")
+        if compact_vars is not None and len(compact_vars) != len(programs):
+            raise ValueError("need one compact-var set per layer (None to "
+                             "keep a layer's default)")
         # full-graph tensors/layouts are identical across layers: build once
         gt = graph.to_tensors()
         layouts = codegen.build_kernel_layouts(graph, tile=tile,
                                                node_block=node_block)
         self.layers = [
             HectorModule(p, graph, reorder=reorder, compact=compact,
+                         compact_vars=(None if compact_vars is None
+                                       else compact_vars[i]),
                          backend=backend, tile=tile, node_block=node_block,
-                         jit=jit, gt=gt, layouts=layouts)
-            for p in programs
+                         jit=jit, gt=gt, layouts=layouts,
+                         decisions=decisions)
+            for i, p in enumerate(programs)
         ]
         self.activation = activation
         self.backend = backend
         self.jit = jit
+        self.decisions = decisions
         self._act = codegen._ACTIVATIONS[activation]
         # whole-plan compiled executor over the entire block sequence (all
         # hops in one jitted callable, fronted by a compile cache keyed on
         # the bucketed layout shapes) — the serving hot path
         self.block_executor = executor.BlockExecutor(
-            self.plans, backend=backend, activation=activation)
+            self.plans, backend=backend, activation=activation,
+            decisions=decisions)
 
     @property
     def num_layers(self) -> int:
@@ -169,5 +187,5 @@ class HectorStack:
         return codegen.execute_block_sequence(
             self.plans, list(params), mb.tensors, mb.layouts, mb.dst_locals,
             mb.seed_perm, feats, backend=self.backend,
-            activation=self.activation,
+            activation=self.activation, decisions=self.decisions,
         )

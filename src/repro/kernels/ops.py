@@ -160,6 +160,24 @@ def _fit_tile_n(n: int, tile_n: int) -> int:
     return n if n % tn else tn
 
 
+def _fit_tile_rows(lay_tile: int, tile_rows: Optional[int]) -> int:
+    """Effective kernel row tile: a requested sub-tile of the layout tile
+    (each sub-tile then still lies within one type segment), or the layout
+    tile itself when unset/incompatible."""
+    if tile_rows is None or tile_rows <= 0 or lay_tile % tile_rows:
+        return lay_tile
+    return tile_rows
+
+
+def _subtile_t2g(t2g: jnp.ndarray, lay_tile: int, tile_rows: int):
+    """Expand the tile->group map to sub-tile granularity (each layout tile
+    splits into ``lay_tile // tile_rows`` kernel tiles of the same group,
+    so the map stays non-decreasing and group-aligned)."""
+    if tile_rows == lay_tile:
+        return t2g
+    return jnp.repeat(t2g, lay_tile // tile_rows)
+
+
 @functools.lru_cache(maxsize=None)
 def _make_pallas_segment_mm(tile_rows: int, tile_n: int, num_groups: int,
                             with_scale: bool, interpret: bool):
@@ -213,6 +231,7 @@ def segment_mm(
     row_scale: Optional[jnp.ndarray] = None,  # [M]
     backend: Backend = "xla",
     tile_n: int = 128,
+    tile_rows: Optional[int] = None,        # sub-tile of lay.tile (tuner knob)
 ) -> jnp.ndarray:
     """Y = X @ W[type] (+ per-row scale), X presorted by type. -> [M, n]."""
     if x_sorted.shape[0] == 0:
@@ -222,16 +241,18 @@ def segment_mm(
     scale_p = None
     if row_scale is not None:
         scale_p = pad_rows(row_scale, lay.row_map)[:, None]
+    tr = _fit_tile_rows(lay.tile, tile_rows)
+    t2g = _subtile_t2g(lay.t2g, lay.tile, tr)
     if backend == "xla":
-        y_p = _segment_mm_xla_padded(x_p, w, lay.t2g, scale_p, lay.tile)
+        y_p = _segment_mm_xla_padded(x_p, w, t2g, scale_p, tr)
     else:
         interpret = backend == "pallas_interpret"
         tn = _fit_tile_n(w.shape[-1], tile_n)
-        f = _make_pallas_segment_mm(lay.tile, tn, lay.num_groups,
+        f = _make_pallas_segment_mm(tr, tn, lay.num_groups,
                                     scale_p is not None, interpret)
         if scale_p is None:
             scale_p = jnp.ones((x_p.shape[0], 1), x_p.dtype)
-        y_p = f(x_p, w, scale_p, lay.t2g)
+        y_p = f(x_p, w, scale_p, t2g)
     return y_p[lay.inv_map]
 
 
@@ -309,6 +330,7 @@ def segment_mm_gather(
     row_scale: Optional[jnp.ndarray] = None,  # [M] canonical per-row scale
     backend: Backend = "xla",
     tile_n: int = 128,
+    tile_rows: Optional[int] = None,        # sub-tile of lay.tile (tuner knob)
 ) -> jnp.ndarray:
     """Y = X[G] @ W[type] with the gather folded into the kernel. -> [M, n].
 
@@ -329,19 +351,21 @@ def segment_mm_gather(
     scale_p = None
     if row_scale is not None:
         scale_p = pad_rows(row_scale, lay.row_map)[:, None]
+    tr = _fit_tile_rows(lay.tile, tile_rows)
+    t2g = _subtile_t2g(lay.t2g, lay.tile, tr)
     if backend == "xla":
         valid = gather_rows >= 0
         x_p = jnp.where(valid[:, None],
                         x_src[jnp.maximum(gather_rows, 0)], 0)
-        y_p = _segment_mm_xla_padded(x_p, w, lay.t2g, scale_p, lay.tile)
+        y_p = _segment_mm_xla_padded(x_p, w, t2g, scale_p, tr)
     else:
         interpret = backend == "pallas_interpret"
         tn = _fit_tile_n(n, tile_n)
-        f = _make_pallas_segment_mm_gather(lay.tile, tn, lay.num_groups,
+        f = _make_pallas_segment_mm_gather(tr, tn, lay.num_groups,
                                            scale_p is not None, interpret)
         if scale_p is None:
             scale_p = jnp.ones((gather_rows.shape[0], 1), x_src.dtype)
-        y_p = f(x_src, w, scale_p, gather_rows, lay.t2g)
+        y_p = f(x_src, w, scale_p, gather_rows, t2g)
     return y_p[lay.inv_map]
 
 

@@ -55,6 +55,8 @@ def serve(
     repeat_after=None,
     compiled: bool = True,
     warmup_batches=None,
+    tune: str = "off",
+    tune_cache=None,
     log=print,
 ):
     """Run the serving loop; returns a stats dict (used by tests/benchmarks).
@@ -77,13 +79,31 @@ def serve(
     engine = RGNNEngine(graph, EngineConfig(
         model=model, layers=layers, dim=dim, hidden=hidden, classes=classes,
         fanouts=fanouts, backend=backend, tile=tile, node_block=node_block,
-        bucket=bucket, seed=seed))
+        bucket=bucket, seed=seed, tune=tune, tune_cache=tune_cache,
+        tune_full_graph=False), log=log)
     fanouts = engine.cfg.fanouts
     log(f"[serve_rgnn] {model} on {dataset} (scale {scale}): "
         f"{graph.num_nodes} nodes, {graph.num_edges} edges, "
         f"{graph.num_etypes} etypes; fanouts={fanouts} "
         f"(graph build {t_graph:.2f}s)")
     params = engine.init_params(jax.random.key(seed))
+
+    if tune != "off":
+        # block-scale tuning on one representative (bucketed) mini-batch,
+        # off the serving stream so traffic is untouched; with a warm
+        # persistent cache this replays decisions with zero measurements
+        warm_seeds = np.random.default_rng(seed + 1).integers(
+            0, graph.num_nodes, batch_size).astype(np.int32)
+        tl = engine.make_loader(lambda step: warm_seeds, num_batches=1,
+                                depth=1)
+        try:
+            engine.tune_minibatch(params, next(tl), feats)
+        finally:
+            tl.close()
+        ts = engine.tuner_stats
+        log(f"[serve_rgnn] tune={tune}: {ts.get('measurements', 0)} "
+            f"measurements, {ts.get('cache_hits', 0)} cache replays "
+            f"(tile {engine.tile}, node_block {engine.node_block})")
 
     loader = engine.make_loader(
         SeedStream(graph.num_nodes, batch_size, seed=seed,
@@ -148,6 +168,8 @@ def serve(
         "executor_compiled": executor.num_compiled,
         "retraces_after_warmup": retraces_after_warmup,
     }
+    for k, v in engine.tuner_stats.items():
+        stats[f"tune_{k}"] = v
     for name, cs in loader.cache_stats().items():
         stats[f"{name}_hits"] = cs["hits"]
         stats[f"{name}_misses"] = cs["misses"]
@@ -204,6 +226,14 @@ def main(argv=None):
     ap.add_argument("--eager", action="store_true",
                     help="bypass the whole-plan compiled executor (op-by-op "
                          "debug path)")
+    ap.add_argument("--tune", default="off",
+                    choices=["off", "cached", "full"],
+                    help="autotune operator variants: 'cached' replays the "
+                         "persistent cache with zero measurements, 'full' "
+                         "measures missing entries on-device")
+    ap.add_argument("--tune-cache", default=None,
+                    help="persistent tuning-cache path (default "
+                         "$REPRO_TUNE_CACHE or ~/.cache/repro-tune.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -223,6 +253,7 @@ def main(argv=None):
         bucket=not args.no_bucket, seed=args.seed,
         cache_blocks=args.cache_blocks, cache_layouts=args.cache_layouts,
         repeat_after=args.repeat_after, compiled=not args.eager,
+        tune=args.tune, tune_cache=args.tune_cache,
     )
 
 

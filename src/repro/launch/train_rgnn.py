@@ -90,6 +90,8 @@ def train(
     eval_every_epochs: int = 0,
     parity: bool = False,
     parity_tol: float = 0.05,
+    tune: str = "off",
+    tune_cache=None,
     log=print,
 ):
     """Run the sampled training loop; returns a stats dict (used by tests
@@ -97,7 +99,7 @@ def train(
     cfg = EngineConfig(model=model, layers=layers, dim=dim, hidden=hidden,
                        classes=classes, fanouts=fanouts, backend=backend,
                        tile=tile, node_block=node_block, bucket=bucket,
-                       seed=seed)
+                       seed=seed, tune=tune, tune_cache=tune_cache)
     engine, feats, labels, train_ids, val_ids = build_task(
         dataset, scale, cfg, seed, val_frac)
     log(f"[train_rgnn] {model} on {dataset} (scale {scale}): "
@@ -115,6 +117,24 @@ def train(
     trainer = SampledTrainer(engine, feats, labels, train_ids, val_ids,
                              opt=opt, ckpt_dir=ckpt_dir, log=log)
     state = trainer.init_state(engine.init_params(jax.random.key(seed)))
+
+    if tune != "off":
+        # block-scale tuning on one representative training batch (bucketed
+        # shapes make the decisions valid for the whole epoch stream)
+        warm_seeds = np.sort(np.random.default_rng(seed + 1).choice(
+            train_ids, size=min(batch_size, len(train_ids)),
+            replace=False)).astype(np.int32)
+        tl = engine.make_loader(lambda step: warm_seeds, num_batches=1,
+                                depth=1)
+        try:
+            engine.tune_minibatch(state.params, next(tl), feats)
+        finally:
+            tl.close()
+        ts = engine.tuner_stats
+        log(f"[train_rgnn] tune={tune}: {ts.get('measurements', 0)} "
+            f"measurements, {ts.get('cache_hits', 0)} cache replays "
+            f"(tile {engine.tile}, node_block {engine.node_block})")
+
     start_step = 0
     if resume:
         state, start_step = trainer.resume(state)
@@ -127,6 +147,8 @@ def train(
         ckpt_every=ckpt_every, eval_every_epochs=eval_every_epochs,
         log_every=max(1, bpe // 2))
 
+    for k, v in engine.tuner_stats.items():
+        stats[f"tune_{k}"] = v
     final_train = trainer.full.evaluate(state.params)
     final_val = (trainer.full.evaluate(state.params, val_ids)
                  if len(val_ids) else None)
@@ -213,6 +235,14 @@ def main(argv=None):
                          "step budget and assert the sampled loss is within "
                          "--parity-tol of it")
     ap.add_argument("--parity-tol", type=float, default=0.05)
+    ap.add_argument("--tune", default="off",
+                    choices=["off", "cached", "full"],
+                    help="autotune operator variants: 'cached' replays the "
+                         "persistent cache with zero measurements, 'full' "
+                         "measures missing entries on-device")
+    ap.add_argument("--tune-cache", default=None,
+                    help="persistent tuning-cache path (default "
+                         "$REPRO_TUNE_CACHE or ~/.cache/repro-tune.json)")
     args = ap.parse_args(argv)
 
     if args.scale is not None:
@@ -234,6 +264,7 @@ def main(argv=None):
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume, eval_every_epochs=args.eval_every_epochs,
         parity=args.parity, parity_tol=args.parity_tol,
+        tune=args.tune, tune_cache=args.tune_cache,
     )
 
 

@@ -43,7 +43,15 @@ def parse_fanout(spec: str, layers: int) -> List[int]:
 
 @dataclasses.dataclass
 class EngineConfig:
-    """Model/compilation configuration shared by serving and training."""
+    """Model/compilation configuration shared by serving and training.
+
+    ``tune`` selects the autotuning mode (``repro.tune``): ``off`` keeps the
+    static lowering defaults, ``cached`` replays persisted decisions with
+    zero measurements, ``full`` measures whatever the persistent cache
+    (``tune_cache``, default ``~/.cache/repro-tune.json``) is missing. The
+    tuner may override ``tile``/``node_block`` with its measured layout
+    decision.
+    """
 
     model: str = "rgat"
     layers: int = 2
@@ -57,11 +65,19 @@ class EngineConfig:
     bucket: bool = True
     activation: str = "relu"
     seed: int = 0
+    tune: str = "off"                    # off | cached | full
+    tune_cache: Optional[str] = None     # persistent decision cache path
+    # False for block-path-only callers (serving): keeps the materialization
+    # decisions (they shape the shared lowered plans) but skips the
+    # full-graph layout/op measurements serving traffic never queries
+    tune_full_graph: bool = True
 
     def __post_init__(self):
         if self.model not in MODEL_PROGRAMS:
             raise ValueError(f"unknown model {self.model!r}; "
                              f"have {sorted(MODEL_PROGRAMS)}")
+        if self.tune not in ("off", "cached", "full"):
+            raise ValueError(f"tune={self.tune!r}; pick off/cached/full")
         self.fanouts = list(self.fanouts) if self.fanouts is not None \
             else [5] * self.layers
         if len(self.fanouts) != self.layers:
@@ -78,17 +94,39 @@ class RGNNEngine:
     ``StackTrainExecutor``) and sampled mini-batch (``BlockExecutor`` /
     ``BlockTrainExecutor``), sharing lowered plans and parameters."""
 
-    def __init__(self, graph: HeteroGraph, cfg: EngineConfig):
+    def __init__(self, graph: HeteroGraph, cfg: EngineConfig, log=None):
         self.graph = graph
         self.cfg = cfg
         prog_fn = MODEL_PROGRAMS[cfg.model]
         dims = cfg.dims
+        programs = [prog_fn(dims[i], dims[i + 1]) for i in range(cfg.layers)]
+
+        # autotuning: measured (or cache-replayed) per-op variants, per-var
+        # materialization, and the kernel-layout tile — all folded into the
+        # stack build below. The effective tile can differ from cfg.tile.
+        self.tuner = None
+        self.decisions = None
+        compact_vars = None
+        self.tile, self.node_block = cfg.tile, cfg.node_block
+        if cfg.tune != "off":
+            from repro.tune.tuner import Tuner  # lazy: pulls in codegen
+            self.tuner = Tuner(mode=cfg.tune, cache_path=cfg.tune_cache,
+                               log=log)
+            report = self.tuner.tune_stack(
+                programs, graph, backend=cfg.backend, tile=cfg.tile,
+                node_block=cfg.node_block, feat_dims=dims[:-1],
+                seed=cfg.seed, tune_layout=cfg.tune_full_graph,
+                tune_ops=cfg.tune_full_graph)
+            self.decisions = report.decisions
+            compact_vars = report.compact_vars
+            self.tile, self.node_block = report.tile, report.node_block
+
         # jit=True so the full-graph path runs through the compiled
         # PlanExecutor, not the op-by-op debug loop
         self.stack = HectorStack(
-            [prog_fn(dims[i], dims[i + 1]) for i in range(cfg.layers)],
-            graph, backend=cfg.backend, tile=cfg.tile,
-            node_block=cfg.node_block, activation=cfg.activation, jit=True,
+            programs, graph, backend=cfg.backend, tile=self.tile,
+            node_block=self.node_block, activation=cfg.activation, jit=True,
+            compact_vars=compact_vars, decisions=self.decisions,
         )
         self.sampler = FanoutSampler(graph, cfg.fanouts, seed=cfg.seed)
 
@@ -125,7 +163,12 @@ class RGNNEngine:
         cache_blocks: int = 0,
         cache_layouts: int = 0,
     ) -> MiniBatchLoader:
-        """A prefetching loader over this engine's sampler/layout config."""
+        """A prefetching loader over this engine's sampler/layout config.
+
+        Blocks keep the *configured* tile (not the tuned full-graph layout
+        tile): the layout decision is measured at full-graph scale and does
+        not transfer to sampled-block shapes — the block-scale op variants
+        are instead tuned against these layouts via ``tune_minibatch``."""
         return MiniBatchLoader(
             self.sampler, seed_source,
             tile=self.cfg.tile, node_block=self.cfg.node_block,
@@ -133,6 +176,23 @@ class RGNNEngine:
             num_batches=num_batches, cache_blocks=cache_blocks,
             cache_layouts=cache_layouts,
         )
+
+    # ------------------------------------------------------------------
+    def tune_minibatch(self, params, mb, global_feats) -> None:
+        """Extend the decision table with block-scale op variants measured
+        (or cache-replayed) on one representative ``MiniBatch``. Bucketed
+        block shapes make the decisions valid for steady-state traffic; the
+        executors pick them up via the decision-table fingerprint in their
+        compile-cache keys."""
+        if self.tuner is None:
+            return
+        self.tuner.tune_block_sequence(
+            self.plans, params, mb, global_feats,
+            backend=self.cfg.backend, activation=self.cfg.activation)
+
+    @property
+    def tuner_stats(self) -> dict:
+        return dict(self.tuner.stats) if self.tuner is not None else {}
 
     # ------------------------------------------------------------------
     def forward_minibatch(self, params, mb, global_feats,

@@ -53,7 +53,7 @@ class FullGraphTrainer:
         self.log = log or _quiet
         self.step_exec = executor.StackTrainExecutor(
             engine.plans, self.opt, backend=engine.cfg.backend,
-            activation=engine.cfg.activation)
+            activation=engine.cfg.activation, decisions=engine.decisions)
         self._idx = jnp.asarray(self.train_ids)
         self._labels_train = jnp.asarray(self.labels[self.train_ids])
 
@@ -123,7 +123,7 @@ class SampledTrainer:
         self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
         self.step_exec = executor.BlockTrainExecutor(
             engine.plans, self.opt, backend=engine.cfg.backend,
-            activation=engine.cfg.activation)
+            activation=engine.cfg.activation, decisions=engine.decisions)
         # full-graph evaluator shares the optimizer (its update path is
         # unused for eval) and the engine's plans/layouts
         self.full = FullGraphTrainer(engine, feats, labels, train_ids,

@@ -1,0 +1,33 @@
+"""Measurement-driven per-operator autotuning (ISSUE 4 tentpole).
+
+Hector's compiler decouples model semantics from per-operator optimization;
+this package supplies the *mechanism* that picks each lowered operator's
+variant — backend, tile shape, in-kernel gather fusion, per-edge-var
+materialization, and the kernel-layout tile — by cost-model pruning plus
+on-device timing, with a persistent cache so tuned decisions replay across
+processes with zero measurements.
+
+``codegen`` imports the leaf modules here (``device``, ``space``,
+``decisions``), so this ``__init__`` must stay import-light: the ``Tuner``
+(which itself imports codegen) loads lazily.
+"""
+from repro.tune.cache import TuneCache, default_cache_path  # noqa: F401
+from repro.tune.decisions import TuningDecisions            # noqa: F401
+from repro.tune.device import (device_kind,                 # noqa: F401
+                               fused_gather_budget_bytes, vmem_bytes)
+from repro.tune.space import (GemmVariant, TravVariant,     # noqa: F401
+                              gemm_key, trav_key)
+
+__all__ = [
+    "TuneCache", "default_cache_path", "TuningDecisions", "device_kind",
+    "fused_gather_budget_bytes", "vmem_bytes", "GemmVariant", "TravVariant",
+    "gemm_key", "trav_key", "Tuner", "TuneReport",
+]
+
+
+def __getattr__(name):
+    # lazy: tuner -> codegen -> tune.device would otherwise be a cycle
+    if name in ("Tuner", "TuneReport"):
+        from repro.tune import tuner as _tuner
+        return getattr(_tuner, name)
+    raise AttributeError(name)

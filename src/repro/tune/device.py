@@ -1,0 +1,83 @@
+"""Device introspection for the autotuner and the codegen fusion gate.
+
+The gather-fused kernels keep their whole ungathered source block (plus the
+scalar-prefetched gather/slot maps) resident in VMEM, so the budget that
+gates fusion must come from the device actually executing the kernel — not
+from a constant. There is no public VMEM query in JAX, so the sizes come
+from a per-device-kind table (TPU cores carry ~16 MiB of VMEM across
+generations; see the Pallas guide's memory hierarchy) with an environment
+override for odd parts.
+
+This module deliberately imports nothing from ``repro`` so that
+``core/codegen.py`` can use it without an import cycle (the tuner imports
+codegen, codegen imports only this leaf).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+# Physical VMEM per core by TPU generation. Entries are matched as lowercase
+# substrings of ``Device.device_kind``; unknown accelerators fall back to the
+# conservative 16 MiB that every shipped TPU core provides.
+_VMEM_BYTES_BY_KIND = {
+    "v2": 16 * 1024 * 1024,
+    "v3": 16 * 1024 * 1024,
+    "v4": 16 * 1024 * 1024,
+    "v5 lite": 16 * 1024 * 1024,
+    "v5e": 16 * 1024 * 1024,
+    "v5p": 16 * 1024 * 1024,
+    "v6": 32 * 1024 * 1024,
+}
+_DEFAULT_VMEM_BYTES = 16 * 1024 * 1024
+
+# Fraction of VMEM the fused-gather kernels may claim for their resident
+# source block + index maps. The rest stays free for the kernel's own
+# input/output blocks, double buffering, and the weight block.
+_FUSED_GATHER_VMEM_FRACTION = 0.25
+
+VMEM_ENV = "REPRO_VMEM_BYTES"
+BUDGET_ENV = "REPRO_FUSED_GATHER_BUDGET_BYTES"
+
+
+@functools.lru_cache(maxsize=None)
+def device_kind() -> str:
+    """Stable, key-safe identifier of the default device, e.g.
+    ``cpu`` or ``tpu:TPU v4``. Part of every tuning-cache key so decisions
+    measured on one part are never replayed on another."""
+    backend = jax.default_backend()
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # no devices initialized yet / headless
+        kind = backend
+    kind = str(kind).strip().replace("|", "/")
+    return backend if kind == backend else f"{backend}:{kind}"
+
+
+def vmem_bytes() -> int:
+    """Physical VMEM of the default device (env-overridable).
+
+    CPU (and interpret-mode testing) has no VMEM; it reports the default
+    TPU size so interpret-mode runs exercise the same fusion decisions the
+    compiled kernels would take on hardware.
+    """
+    env = os.environ.get(VMEM_ENV)
+    if env:
+        return int(env)
+    kind = device_kind().lower()
+    for sub, size in _VMEM_BYTES_BY_KIND.items():
+        if sub in kind:
+            return size
+    return _DEFAULT_VMEM_BYTES
+
+
+def fused_gather_budget_bytes() -> int:
+    """Bytes the fused-gather kernels may keep resident in VMEM (source
+    block + gather/slot index maps), derived from the device's actual VMEM.
+    ``REPRO_FUSED_GATHER_BUDGET_BYTES`` overrides the derived value."""
+    env = os.environ.get(BUDGET_ENV)
+    if env:
+        return int(env)
+    return int(vmem_bytes() * _FUSED_GATHER_VMEM_FRACTION)

@@ -1,0 +1,216 @@
+"""The per-operator variant space and the keys decisions are stored under.
+
+A *variant* is one point in the operator-specific optimization space the
+paper's code generator chooses from (§3.4): execution backend, GEMM tile
+shape, and whether the access-scheme gather runs inside the kernel. A *key*
+identifies one lowered op instance up to everything that determines which
+variant wins: the spec's identity fields, the layout signature (tile sizes,
+group counts, power-of-two row buckets — sampled blocks are shape-bucketed,
+so buckets make block-scale decisions reusable across batches), the dtype,
+and the device kind. Keys are plain strings so the persistent cache stores
+them verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.kernels.layout import pow2ceil
+from repro.tune import device as D
+
+# sentinel backend meaning "inherit the plan-wide backend"
+DEFAULT = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmVariant:
+    """One point in a GEMM-template instance's variant space.
+
+    ``None`` knobs keep the lowering default (layout tile rows, 128-column
+    tiles, the VMEM-budget fusion heuristic)."""
+
+    backend: str = DEFAULT
+    tile_rows: Optional[int] = None
+    tile_n: Optional[int] = None
+    fuse_gather: Optional[bool] = None
+
+    def to_json(self) -> dict:
+        return {"kind": "gemm", "backend": self.backend,
+                "tile_rows": self.tile_rows, "tile_n": self.tile_n,
+                "fuse_gather": self.fuse_gather}
+
+
+@dataclasses.dataclass(frozen=True)
+class TravVariant:
+    """One point in a fused traversal instance's variant space."""
+
+    backend: str = DEFAULT
+    fuse_gather: Optional[bool] = None
+
+    def to_json(self) -> dict:
+        return {"kind": "trav", "backend": self.backend,
+                "fuse_gather": self.fuse_gather}
+
+
+GEMM_DEFAULT = GemmVariant()
+TRAV_DEFAULT = TravVariant()
+
+
+def variant_from_json(d: dict):
+    if d["kind"] == "gemm":
+        return GemmVariant(backend=d.get("backend", DEFAULT),
+                           tile_rows=d.get("tile_rows"),
+                           tile_n=d.get("tile_n"),
+                           fuse_gather=d.get("fuse_gather"))
+    if d["kind"] == "trav":
+        return TravVariant(backend=d.get("backend", DEFAULT),
+                           fuse_gather=d.get("fuse_gather"))
+    raise ValueError(f"unknown variant kind {d!r}")
+
+
+# ---------------------------------------------------------------------------
+# op-instance keys
+# ---------------------------------------------------------------------------
+def gemm_key(op, lay, x_rows: int, k: int, n: int, has_scale: bool,
+             dtype) -> str:
+    """Key of one lowered GemmSpec instance: spec identity x layout
+    signature x dtype x device kind."""
+    return "|".join([
+        "gemm", op.gather.value, op.type_index.value, op.seg_ptr,
+        f"k{k}", f"n{n}", f"s{int(has_scale)}",
+        f"t{lay.tile}", f"g{lay.num_groups}",
+        f"rp{pow2ceil(int(lay.row_map.shape[0]))}",
+        f"x{pow2ceil(int(x_rows))}",
+        str(dtype), D.device_kind(),
+    ])
+
+
+def trav_key(agg_kind: str, d: int, compact_msg: bool, bc, dtype) -> str:
+    """Key of one fused traversal-aggregation instance (softmax+agg or
+    weighted agg) over a blocked-CSR layout."""
+    return "|".join([
+        "trav", agg_kind, f"d{d}", f"c{int(compact_msg)}",
+        f"et{bc.edge_tile}", f"nb{bc.node_block}",
+        f"ep{pow2ceil(int(bc.edge_map.shape[0]))}",
+        str(dtype), D.device_kind(),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# key parsing + candidate enumeration
+# ---------------------------------------------------------------------------
+_MIN_TILE_ROWS = 8  # f32 sublane minimum — smaller row tiles can't be laid out
+
+_FUSABLE = ("edge_src", "edge_dst", "unique_src")
+
+
+def parse_key(key: str) -> dict:
+    """Decode a decision key back into the fields that shape its variant
+    space. The tuner *records* the exact keys codegen queries (so key
+    construction has a single source of truth) and enumerates from them."""
+    parts = key.split("|")
+
+    def num(part: str, prefix: str) -> int:
+        assert part.startswith(prefix), (key, part, prefix)
+        return int(part[len(prefix):])
+
+    if parts[0] == "gemm":
+        gather, tindex, seg = parts[1:4]
+        return {
+            "kind": "gemm", "gather": gather, "tindex": tindex, "seg": seg,
+            "k": num(parts[4], "k"), "n": num(parts[5], "n"),
+            "has_scale": bool(num(parts[6], "s")),
+            "lay_tile": num(parts[7], "t"), "groups": num(parts[8], "g"),
+            "padded_rows": num(parts[9], "rp"), "x_rows": num(parts[10], "x"),
+            "dtype": parts[11], "device": parts[12],
+            "fusable": gather in _FUSABLE and tindex != "none",
+        }
+    if parts[0] == "trav":
+        return {
+            "kind": "trav", "agg": parts[1], "d": num(parts[2], "d"),
+            "compact_msg": bool(num(parts[3], "c")),
+            "edge_tile": num(parts[4], "et"),
+            "node_block": num(parts[5], "nb"),
+            "padded_edges": num(parts[6], "ep"), "dtype": parts[7],
+            "device": parts[8],
+        }
+    raise ValueError(f"unparseable decision key {key!r}")
+
+
+def _fit_tile_n(n: int, tile_n: int) -> int:
+    """Mirror of ``kernels.ops._fit_tile_n``: the column tile a request
+    actually resolves to (used to drop behaviorally identical candidates)."""
+    tn = min(tile_n, n)
+    return n if n % tn else tn
+
+
+def _col_tile_candidates(n: int) -> List[Optional[int]]:
+    """Column-tile candidates with distinct *effective* tiles: for n <= 128
+    every request clips to the same tile, so only the default survives."""
+    cands: List[Optional[int]] = [None]          # the 128 default
+    alt = min(256, max(_MIN_TILE_ROWS, n))
+    if _fit_tile_n(n, alt) != _fit_tile_n(n, 128):
+        cands.append(alt)
+    return cands
+
+
+def _row_tile_candidates(lay_tile: int) -> List[Optional[int]]:
+    """Sub-tiles of the layout tile: each kernel row tile must stay within
+    one type segment, which any divisor of the layout tile guarantees."""
+    cands: List[Optional[int]] = [None]  # the layout tile itself
+    t = lay_tile // 2
+    while t >= _MIN_TILE_ROWS:
+        cands.append(t)
+        t //= 2
+    return cands[:3]
+
+
+def _alt_backends(plan_backend: str) -> List[str]:
+    """Backends worth proposing besides the plan-wide one. On CPU, 'pallas'
+    does not exist and 'pallas_interpret' is a pure correctness mode, so
+    the only real alternative is falling back to 'xla' from a Pallas plan."""
+    backends = [DEFAULT]
+    if D.device_kind().startswith("tpu") and plan_backend != "pallas":
+        backends.append("pallas")
+    if plan_backend != "xla":
+        backends.append("xla")
+    return backends
+
+
+def candidates_for_key(key: str, plan_backend: str) -> List:
+    """Enumerate the (unpruned) variant space of one recorded op instance.
+    The default variant is always first."""
+    info = parse_key(key)
+    out: List = []
+    if info["kind"] == "trav":
+        for b in _alt_backends(plan_backend):
+            eff = plan_backend if b == DEFAULT else b
+            out.append(TravVariant(backend=b))
+            if eff != "xla":
+                # the materialized-gather kernel (fusion off) is a variant
+                out.append(TravVariant(backend=b, fuse_gather=False))
+        return _dedup(out)
+    for b in _alt_backends(plan_backend):
+        eff = plan_backend if b == DEFAULT else b
+        if eff == "xla":
+            # the XLA formulation batches the einsum by row tile; column
+            # tiling and gather fusion are kernel-only knobs
+            for tr in _row_tile_candidates(info["lay_tile"]):
+                out.append(GemmVariant(backend=b, tile_rows=tr))
+            continue
+        for tr in _row_tile_candidates(info["lay_tile"]):
+            for tn in _col_tile_candidates(info["n"]):
+                fuses = [None, False] if info["fusable"] else [None]
+                for fg in fuses:
+                    out.append(GemmVariant(backend=b, tile_rows=tr,
+                                           tile_n=tn, fuse_gather=fg))
+    return _dedup(out)
+
+
+def _dedup(variants: Sequence) -> List:
+    seen, out = set(), []
+    for v in variants:
+        if v not in seen:
+            seen.add(v)
+            out.append(v)
+    return out

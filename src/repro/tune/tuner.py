@@ -1,0 +1,328 @@
+"""The measurement-driven autotuner (ISSUE 4 tentpole).
+
+Per lowered op instance the tuner searches a small variant space — backend,
+``tile_rows``/``tile_n``, in-kernel gather fusion, per-edge-var COMPACT vs
+VANILLA materialization, and the kernel-layout tile — pruning with the
+``tune/cost.py`` prior and deciding by on-device timing of the whole lowered
+plan (coordinate descent: one op's variant changes at a time, so fusion
+interactions are measured, not modeled). Decisions land in a
+``TuningDecisions`` table and in the persistent ``TuneCache``; a warm cache
+replays every decision with **zero** measurements.
+
+Keys are never constructed here: a shape-only ``jax.eval_shape`` pass runs
+the generated code with a recording decision table, capturing the exact key
+strings ``codegen`` will query at trace time. That makes key construction
+single-sourced — a tuned decision can't miss its op because of key drift.
+
+Modes:
+  * ``off``    — the tuner is never built; hardcoded defaults everywhere.
+  * ``cached`` — replay persisted decisions; never measure. Ops without a
+                 cache entry keep the default heuristics.
+  * ``full``   — replay persisted decisions; measure (and persist) the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import codegen
+from repro.core.ir import passes
+from repro.tune import cost
+from repro.tune import device as D
+from repro.tune import space as S
+from repro.tune.cache import TuneCache
+from repro.tune.decisions import TuningDecisions
+
+MODES = ("off", "cached", "full")
+
+# layout-tile candidates measured per graph (deduped against the caller's)
+_LAYOUT_CANDIDATES = ((128, 128), (32, 32))
+
+
+class _KeyRecorder:
+    """Decision-table stand-in that records every key codegen queries."""
+
+    def __init__(self):
+        self.keys: List[str] = []
+
+    def lookup(self, key: str):
+        if key not in self.keys:
+            self.keys.append(key)
+        return None
+
+
+@dataclasses.dataclass
+class TuneReport:
+    """What a tuned stack needs at build time."""
+
+    decisions: TuningDecisions
+    compact_vars: Optional[List[Optional[frozenset]]]  # per layer, None=default
+    tile: int
+    node_block: int
+    graph_key: str
+
+
+def graph_key(graph) -> str:
+    """Graph identity for layout/materialization decisions."""
+    return (f"g{graph.num_nodes}n{graph.num_edges}e{graph.num_etypes}"
+            f"t{graph.num_ntypes}r{graph.entity_compaction_ratio:.3f}")
+
+
+class Tuner:
+    def __init__(self, mode: str = "cached", cache_path: Optional[str] = None,
+                 warmup: int = 1, iters: int = 3, max_candidates: int = 4,
+                 log=None):
+        if mode not in MODES:
+            raise ValueError(f"tune mode {mode!r}; pick one of {MODES}")
+        self.mode = mode
+        self.cache = TuneCache(cache_path)
+        self.decisions = TuningDecisions()
+        self.warmup = warmup
+        self.iters = iters
+        self.max_candidates = max_candidates
+        self.log = log or (lambda *a, **k: None)
+        self.stats: Dict[str, int] = {
+            "measurements": 0, "cache_hits": 0, "tuned_ops": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # measurement
+    # ------------------------------------------------------------------
+    def _time(self, fn, *args) -> float:
+        """Median on-device wall-clock of one compiled candidate."""
+        self.stats["measurements"] += 1
+        for _ in range(1 + self.warmup):        # compile + warmup
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(self.iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    def _plan_time(self, plan, params, gt, kl, feats, backend,
+                   decisions) -> float:
+        fn = jax.jit(lambda p, g, k, f: codegen.execute_plan(
+            plan, p, g, f, k, backend, decisions))
+        return self._time(fn, params, gt, kl, feats)
+
+    # ------------------------------------------------------------------
+    # the per-key decision loop (shared by plan- and block-scale tuning)
+    # ------------------------------------------------------------------
+    def _trial(self, key: str, variant) -> TuningDecisions:
+        t = TuningDecisions(self.decisions.ops, self.decisions.materialization,
+                            self.decisions.layout)
+        t.set_op(key, variant)
+        return t
+
+    def _tune_keys(self, keys: Sequence[str], backend: str, measure) -> None:
+        """Decide every recorded key: cache replay first, measurement (in
+        ``full`` mode) for the rest. ``measure(decisions) -> seconds``."""
+        for key in keys:
+            if self.decisions.lookup(key) is not None:
+                continue                         # decided earlier this run
+            cached = self.cache.get(key)
+            if cached is not None:
+                self.stats["cache_hits"] += 1
+                self.decisions.set_op(key, S.variant_from_json(cached))
+                continue
+            if self.mode != "full":
+                continue                         # cached mode: keep defaults
+            cands = cost.prune(key, S.candidates_for_key(key, backend),
+                               backend, self.max_candidates)
+            best, best_t = cands[0], float("inf")
+            if len(cands) > 1:
+                for c in cands:
+                    t = measure(self._trial(key, c))
+                    self.log(f"[tune]   {key.split('|')[0]} {c} "
+                             f"{t * 1e6:.0f}us")
+                    if t < best_t:
+                        best, best_t = c, t
+            self.decisions.set_op(key, best)
+            self.cache.put(key, best.to_json())
+            self.stats["tuned_ops"] += 1
+
+    # ------------------------------------------------------------------
+    # full-graph stack tuning (layout tile -> materialization -> op variants)
+    # ------------------------------------------------------------------
+    def tune_stack(self, programs: Sequence, graph, *, backend: str = "xla",
+                   tile: int = 128, node_block: int = 128,
+                   feat_dims: Optional[Sequence[int]] = None,
+                   reorder: bool = True, compact: bool = True,
+                   seed: int = 0, tune_layout: bool = True,
+                   tune_ops: bool = True) -> TuneReport:
+        """Tune a multi-layer stack over one graph. ``feat_dims`` is each
+        layer's input feature dimension (defaults to probing layer 0's
+        weights is not possible generically, so callers pass it).
+
+        ``tune_layout``/``tune_ops`` gate the full-graph-only decision
+        families: a caller that will only ever run the sampled block path
+        (serving) keeps just the materialization decisions — which shape
+        the lowered plans shared by both paths — and skips the full-graph
+        layout/op measurements its traffic would never query."""
+        if feat_dims is None:
+            raise ValueError("tune_stack needs feat_dims (input dim per "
+                             "layer)")
+        if len(feat_dims) != len(programs):
+            raise ValueError("one feat dim per layer program")
+        gkey = graph_key(graph)
+        gt = graph.to_tensors()
+        rng = np.random.default_rng(seed)
+
+        def feats_for(dim: int):
+            return {"feature": jnp.asarray(
+                rng.normal(size=(graph.num_nodes, dim)), jnp.float32)}
+
+        # -- layout tile (per graph; all layers share the kernel layouts)
+        if tune_layout:
+            tile, node_block = self._tune_layout(
+                programs[0], graph, gt, gkey, backend, tile, node_block,
+                feats_for(feat_dims[0]), reorder, compact, seed)
+        kl = codegen.build_kernel_layouts(graph, tile=tile,
+                                          node_block=node_block)
+
+        # -- per layer: materialization, then per-op variants
+        compact_sets: List[Optional[frozenset]] = []
+        for li, prog in enumerate(programs):
+            feats = feats_for(feat_dims[li])
+            cset = self._tune_materialization(
+                prog, li, gt, kl, gkey, backend, feat_dims[li], feats,
+                reorder, compact, seed)
+            compact_sets.append(cset)
+            if not tune_ops:
+                continue
+            plan = passes.lower_program(prog, reorder=reorder,
+                                        compact=compact, compact_vars=cset)
+            params = codegen.init_params(plan, gt, jax.random.key(seed))
+            rec = _KeyRecorder()
+            jax.eval_shape(lambda p, g, k, f, pl=plan: codegen.execute_plan(
+                pl, p, g, f, k, backend, rec), params, gt, kl, feats)
+
+            def measure(trial, pl=plan, pa=params, fe=feats):
+                return self._plan_time(pl, pa, gt, kl, fe, backend, trial)
+
+            self._tune_keys(rec.keys, backend, measure)
+        self.cache.save()
+        self.log(f"[tune] stack tuned: {self.stats['tuned_ops']} measured "
+                 f"ops, {self.stats['cache_hits']} cache replays, "
+                 f"{self.stats['measurements']} measurements")
+        return TuneReport(decisions=self.decisions,
+                          compact_vars=compact_sets, tile=tile,
+                          node_block=node_block, graph_key=gkey)
+
+    # ------------------------------------------------------------------
+    def _tune_layout(self, prog, graph, gt, gkey, backend, tile, node_block,
+                     feats, reorder, compact, seed):
+        key = f"lay|{gkey}|{backend}|{D.device_kind()}"
+        cached = self.cache.get(key)
+        if cached is not None:
+            self.stats["cache_hits"] += 1
+            self.decisions.set_layout(key, cached["tile"],
+                                      cached["node_block"])
+            return cached["tile"], cached["node_block"]
+        if self.mode != "full":
+            return tile, node_block
+        plan = passes.lower_program(prog, reorder=reorder, compact=compact)
+        params = codegen.init_params(plan, gt, jax.random.key(seed))
+        cands = [(tile, node_block)]
+        cands += [c for c in _LAYOUT_CANDIDATES if c not in cands]
+        best, best_t = cands[0], float("inf")
+        for t, nb in cands:
+            kl = codegen.build_kernel_layouts(graph, tile=t, node_block=nb)
+            dt = self._plan_time(plan, params, gt, kl, feats, backend, None)
+            self.log(f"[tune]   layout tile={t} node_block={nb} "
+                     f"{dt * 1e6:.0f}us")
+            if dt < best_t:
+                best, best_t = (t, nb), dt
+        self.decisions.set_layout(key, *best)
+        self.cache.put(key, {"tile": best[0], "node_block": best[1]})
+        return best
+
+    # ------------------------------------------------------------------
+    def _tune_materialization(self, prog, layer_idx, gt, kl, gkey, backend,
+                              feat_dim, feats, reorder, compact, seed):
+        """Per-edge-var COMPACT vs VANILLA, gated by the block's
+        entity-compaction ratio and decided by measurement (greedy one-var
+        flips off the static default)."""
+        cands = passes.compactable_edge_vars(prog, reorder=reorder)
+        if not cands:
+            return None
+        key = (f"mat|{prog.name}|d{feat_dim}|{gkey}|{backend}|"
+               f"{D.device_kind()}")
+        cached = self.cache.get(key)
+        if cached is not None and set(cached) == set(cands):
+            self.stats["cache_hits"] += 1
+            self.decisions.set_materialization(key, cached)
+            return frozenset(v for v, m in cached.items() if m == "compact")
+        if self.mode != "full":
+            return None                          # keep the static policy
+        ratio = gt.num_unique / max(1, gt.num_edges)
+        # compaction dedups (src, etype) work; with no dedup available
+        # (ratio ~1) the indirection can only cost — skip the measurements
+        if ratio >= 0.999:
+            current = {v: "vanilla" for v in cands}
+            self.decisions.set_materialization(key, current)
+            self.cache.put(key, current)
+            return frozenset()
+        current = {v: ("compact" if compact else "vanilla") for v in cands}
+        base_t = self._mat_time(prog, current, gt, kl, feats, backend,
+                                reorder, compact, seed)
+        for v in cands:
+            flipped = dict(current)
+            flipped[v] = "vanilla" if current[v] == "compact" else "compact"
+            t = self._mat_time(prog, flipped, gt, kl, feats, backend,
+                               reorder, compact, seed)
+            self.log(f"[tune]   mat {v}={flipped[v]} {t * 1e6:.0f}us "
+                     f"(base {base_t * 1e6:.0f}us)")
+            if t < base_t:
+                current, base_t = flipped, t
+        self.decisions.set_materialization(key, current)
+        self.cache.put(key, current)
+        self.stats["tuned_ops"] += 1
+        return frozenset(v for v, m in current.items() if m == "compact")
+
+    def _mat_time(self, prog, per_var, gt, kl, feats, backend, reorder,
+                  compact, seed) -> float:
+        cset = frozenset(v for v, m in per_var.items() if m == "compact")
+        plan = passes.lower_program(prog, reorder=reorder, compact=compact,
+                                    compact_vars=cset)
+        params = codegen.init_params(plan, gt, jax.random.key(seed))
+        return self._plan_time(plan, params, gt, kl, feats, backend, None)
+
+    # ------------------------------------------------------------------
+    # block-scale tuning (sampled serving / training mini-batches)
+    # ------------------------------------------------------------------
+    def tune_block_sequence(self, plans: Sequence, params, mb, global_feats,
+                            *, backend: str = "xla",
+                            activation: str = "relu") -> TuningDecisions:
+        """Tune the op variants of a sampled block sequence on a
+        representative ``MiniBatch`` (bucketed shapes make the decisions
+        reusable across steady-state traffic). Adds to ``self.decisions``
+        and persists; returns the table."""
+        feats = {"feature": global_feats[mb.input_ids]}
+        gts, kls = list(mb.tensors), list(mb.layouts)
+        dst_locals, seed_perm = list(mb.dst_locals), mb.seed_perm
+        plans = list(plans)
+        params = list(params)
+
+        rec = _KeyRecorder()
+        jax.eval_shape(
+            lambda p, g, k, d, s, f: codegen.execute_block_sequence(
+                plans, p, g, k, d, s, f, backend, activation, rec),
+            params, gts, kls, dst_locals, seed_perm, feats)
+
+        def measure(trial):
+            fn = jax.jit(
+                lambda p, g, k, d, s, f: codegen.execute_block_sequence(
+                    plans, p, g, k, d, s, f, backend, activation, trial))
+            return self._time(fn, params, gts, kls, dst_locals, seed_perm,
+                              feats)
+
+        self._tune_keys(rec.keys, backend, measure)
+        self.cache.save()
+        return self.decisions
