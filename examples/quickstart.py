@@ -1,15 +1,14 @@
-"""Quickstart: express an RGNN in Hector IR, compile, inspect the generated
-plan, and run it — the paper's Figure-5 workflow in ~20 lines of user code.
+"""Quickstart: author an RGNN in the Python-embedded DSL, compile it with
+the unified ``hector.compile()`` front door, inspect the generated plans,
+and run every execution mode — the paper's Figure-5 workflow.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 
+import hector
 from repro.core.graph import synthetic_heterograph
-from repro.core.module import HectorModule
-from repro.models import rgat_program
 
 # a small heterogeneous graph: 5 node types, 12 relation types
 graph = synthetic_heterograph(num_nodes=1000, num_edges=8000,
@@ -17,23 +16,66 @@ graph = synthetic_heterograph(num_nodes=1000, num_edges=8000,
 print(f"graph: {graph.num_nodes} nodes, {graph.num_edges} edges, "
       f"entity compaction ratio {graph.entity_compaction_ratio:.2f}")
 
-# the model is inter-operator IR (6 statements); compilation applies linear
-# operator reordering + compact materialization and lowers onto the GEMM /
-# traversal templates
-prog = rgat_program(in_dim=64, out_dim=64)
-mod = HectorModule(prog, graph, reorder=True, compact=True, backend="xla")
-print("\ngenerated plan:")
-print(mod.describe())
 
-params = mod.init(jax.random.key(0))
+# the model is a plain function over edge/node proxies; tracing it emits
+# the inter-operator IR (6 statements), validated with source-located
+# diagnostics at trace time
+@hector.model
+def rgat(g, e, n, in_dim, out_dim, slope=0.01):
+    W = g.weight("W_rel", (in_dim, out_dim), indexed_by="etype")
+    w_s = g.weight("w_att_src", (out_dim,), indexed_by="etype")
+    w_t = g.weight("w_att_dst", (out_dim,), indexed_by="etype")
+    e["hs"] = e.src["feature"] @ W
+    e["atts"] = hector.dot(e["hs"], w_s)
+    e["attt"] = hector.dot(e.dst["feature"] @ W, w_t)
+    e["att_raw"] = hector.leaky_relu(e["atts"] + e["attt"], slope)
+    e["att"] = hector.edge_softmax(e["att_raw"])
+    n["h_out"] = hector.aggregate(e["hs"], scale=e["att"])
+    return n["h_out"]
+
+
+print("\ntraced program:")
+print(rgat(64, 64).describe())
+
+# one call: trace -> reorder/compact -> lower -> compiled executors + sampler
+compiled = hector.compile(rgat, graph, layers=2, dim=64, hidden=64,
+                          classes=16, sample=5)
+print("\ngenerated plans:")
+print(compiled.describe())
+
+params = compiled.init(0)
 x = jnp.asarray(np.random.default_rng(0).normal(size=(graph.num_nodes, 64)),
                 jnp.float32)
-out = mod.apply(params, {"feature": x})["h_out"]
-print(f"\noutput: {out.shape} finite={bool(jnp.all(jnp.isfinite(out)))}")
 
-# gradients come from template-derived backward ops (custom_vjp)
-loss, grads = jax.value_and_grad(
-    lambda p: jnp.mean(mod.apply(p, {"feature": x})["h_out"] ** 2))(params)
-print(f"loss={float(loss):.4f}, grad norms: "
-      + ", ".join(f"{k}={float(jnp.linalg.norm(v)):.3f}"
-                  for k, v in grads.items()))
+# full-graph forward (per-layer PlanExecutor, jitted + cached)
+logits = compiled.apply(params, x)
+print(f"\nfull-graph logits: {logits.shape} "
+      f"finite={bool(jnp.all(jnp.isfinite(logits)))}")
+
+# sampled mini-batch forward + one compiled train step over the same stack
+labels = np.random.default_rng(1).integers(0, 16, graph.num_nodes)
+loader = compiled.make_loader(
+    lambda step: np.arange(32, dtype=np.int32), num_batches=2, depth=1)
+state = compiled.init_state(params)
+try:
+    for mb in loader:
+        batch_logits = compiled.apply_blocks(params, mb, x)
+        state, metrics = compiled.train_step(
+            state, mb, mb.seq.slice_labels(labels), x)
+        print(f"batch {mb.step}: sampled logits {batch_logits.shape}, "
+              f"train loss {float(metrics['loss']):.4f}")
+finally:
+    loader.close()
+
+# malformed models are rejected at trace time with the offending line
+@hector.model
+def broken(g, e, n, in_dim, out_dim):
+    W = g.weight("W", (in_dim, out_dim), indexed_by="etype")
+    e["hs"] = e.src["feature"] @ W
+    n["h_out"] = hector.aggregate(e["hs"], scale=e["att"])   # 'att' undefined
+    return n["h_out"]
+
+try:
+    broken(64, 64)
+except hector.ProgramValidationError as err:
+    print(f"\nvalidation catches authoring bugs:\n  {err}")

@@ -15,10 +15,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import hector
 from repro.checkpoint import Checkpointer
 from repro.core.graph import synthetic_heterograph
 from repro.optim import AdamW, cosine_schedule
-from repro.train import EngineConfig, FullGraphTrainer, RGNNEngine
+from repro.train import FullGraphTrainer
 
 
 def main(argv=None):
@@ -35,14 +36,13 @@ def main(argv=None):
     x = jnp.asarray(rng.normal(size=(graph.num_nodes, args.dim)), jnp.float32)
     labels = np.asarray(rng.integers(0, args.classes, graph.num_nodes))
 
-    engine = RGNNEngine(graph, EngineConfig(
-        model="rgat", layers=2, dim=args.dim, hidden=args.dim,
-        classes=args.classes))
+    engine = hector.compile("rgat", graph, layers=2, dim=args.dim,
+                            hidden=args.dim, classes=args.classes)
     opt = AdamW(learning_rate=cosine_schedule(3e-3, 20, args.steps),
                 weight_decay=0.01)
     trainer = FullGraphTrainer(engine, x, labels,
                                np.arange(graph.num_nodes), opt=opt)
-    state = trainer.init_state(engine.init_params(jax.random.key(1)))
+    state = trainer.init_state(engine.init(jax.random.key(1)))
     ckpt = Checkpointer(args.ckpt)
 
     losses = []

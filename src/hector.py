@@ -1,0 +1,21 @@
+"""``import hector`` — the public front door to the Hector reproduction.
+
+Re-exports the authoring DSL (``@hector.model`` + the edge/node operations)
+and the unified ``hector.compile()`` facade from ``repro.frontend``::
+
+    import hector
+
+    @hector.model
+    def rgcn(g, e, n, in_dim, out_dim, activation="relu"):
+        W_r = g.weight("W_rel", (in_dim, out_dim), indexed_by="etype")
+        W_0 = g.weight("W_self", (in_dim, out_dim))
+        e["msg"] = e.src["feature"] @ W_r
+        n["h_agg"] = hector.aggregate(e["msg"], reduce="mean")
+        n["h_self"] = n["feature"] @ W_0
+        n["h_out"] = hector.unary(activation, n["h_agg"] + n["h_self"])
+        return n["h_out"]
+
+    compiled = hector.compile(rgcn, graph, layers=2, sample=5)
+"""
+from repro.frontend import *  # noqa: F401,F403
+from repro.frontend import __all__  # noqa: F401

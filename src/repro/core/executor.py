@@ -56,10 +56,13 @@ class _CachedExecutor:
     """
 
     def __init__(self, donate: bool, donate_argnums: Sequence[int],
-                 decisions=None):
+                 decisions=None, static_key: tuple = ()):
         self._cache: Dict[tuple, object] = {}
         self._donate = donate and _donation_supported()
         self._donate_argnums = tuple(donate_argnums)
+        # plan fingerprint(s): distinct lowered plans can never share a
+        # compiled executable even if their argument signatures collide
+        self._static_key = tuple(static_key)
         self.decisions = decisions
         self.cache_hits = 0
         self.cache_misses = 0
@@ -77,7 +80,7 @@ class _CachedExecutor:
     def _call(self, *args):
         fp = self.decisions.fingerprint() if self.decisions is not None \
             else None
-        key = (fp,) + signature(args)
+        key = (self._static_key, fp) + signature(args)
         fn = self._cache.get(key)
         if fn is None:
             self.cache_misses += 1
@@ -116,7 +119,8 @@ class PlanExecutor(_CachedExecutor):
     def __init__(self, plan, backend: str = "xla",
                  donate_feats: bool = False, decisions=None):
         super().__init__(donate_feats, donate_argnums=(3,),
-                         decisions=decisions)
+                         decisions=decisions,
+                         static_key=(plan.fingerprint(),))
         self.plan = plan
         self.backend = backend
 
@@ -142,7 +146,8 @@ class BlockExecutor(_CachedExecutor):
                  activation: str = "relu", donate_feats: bool = True,
                  decisions=None):
         super().__init__(donate_feats, donate_argnums=(5,),
-                         decisions=decisions)
+                         decisions=decisions,
+                         static_key=tuple(p.fingerprint() for p in plans))
         self.plans = list(plans)
         self.backend = backend
         self.activation = activation
@@ -200,7 +205,8 @@ class BlockTrainExecutor(_CachedExecutor):
                  decisions=None):
         # argnums in _traced order: 0=state, 6=feats
         super().__init__(donate_state, donate_argnums=(0, 6),
-                         decisions=decisions)
+                         decisions=decisions,
+                         static_key=tuple(p.fingerprint() for p in plans))
         self.plans = list(plans)
         self.opt = opt
         self.backend = backend
@@ -248,7 +254,8 @@ class StackTrainExecutor(_CachedExecutor):
                  activation: str = "relu", donate_state: bool = True,
                  decisions=None):
         super().__init__(donate_state, donate_argnums=(0,),
-                         decisions=decisions)
+                         decisions=decisions,
+                         static_key=tuple(p.fingerprint() for p in plans))
         self.plans = list(plans)
         self.opt = opt
         self.backend = backend

@@ -22,7 +22,21 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceLoc:
+    """Where a statement was authored (filled in by the tracing frontend)."""
+
+    file: str
+    line: int
+    text: str = ""
+
+    def __str__(self) -> str:
+        tail = f": {self.text}" if self.text else ""
+        return f"{self.file}:{self.line}{tail}"
 
 
 class Layout(enum.Enum):
@@ -198,23 +212,105 @@ class NodeCompute(Stmt):
 
 
 # ---------------------------------------------------------------------------
+# rendering (stable textual form; the basis of the structural fingerprint)
+# ---------------------------------------------------------------------------
+_BINOP_SYMBOL = {"add": "+", "sub": "-", "mul": "*", "div": "/"}
+
+
+def render_expr(e: Expr) -> str:
+    """Deterministic, fully-semantic rendering of an expression tree."""
+    if isinstance(e, NodeFeature):
+        return f"n.{e.name}"
+    if isinstance(e, SrcFeature):
+        return f"e.src.{e.name}"
+    if isinstance(e, DstFeature):
+        return f"e.dst.{e.name}"
+    if isinstance(e, EdgeVar):
+        return f"e[{e.name}]"
+    if isinstance(e, NodeVar):
+        return f"n[{e.name}]"
+    if isinstance(e, Weight):
+        dims = "x".join(str(d) for d in e.shape)
+        return f"{e.name}[{e.indexed_by or 'shared'}:{dims}]"
+    if isinstance(e, (TypedLinear, Linear)):
+        return f"({render_expr(e.x)} @ {render_expr(e.weight)})"
+    if isinstance(e, DotProduct):
+        return f"dot({render_expr(e.a)}, {render_expr(e.b)})"
+    if isinstance(e, Binary):
+        sym = _BINOP_SYMBOL.get(e.op, e.op)
+        return f"({render_expr(e.a)} {sym} {render_expr(e.b)})"
+    if isinstance(e, Unary):
+        if e.op == "leaky_relu":
+            # repr: full float precision — the fingerprint must distinguish
+            # constants closer than %g's 6 significant digits
+            return f"leaky_relu({render_expr(e.a)}, {e.alpha!r})"
+        return f"{e.op}({render_expr(e.a)})"
+    if isinstance(e, Concat):
+        return "concat(" + ", ".join(render_expr(p) for p in e.parts) + ")"
+    if isinstance(e, Scalar):
+        return repr(e.value)
+    return repr(e)
+
+
+def render_stmt(s: Stmt) -> str:
+    if isinstance(s, EdgeCompute):
+        return f"for e: e[{s.out}] = {render_expr(s.expr)}"
+    if isinstance(s, EdgeSoftmax):
+        return f"for e: e[{s.out}] = edge_softmax(e[{s.src}])"
+    if isinstance(s, NodeAggregate):
+        scale = f" * e[{s.scale}]" if s.scale else ""
+        return (f"for n: n[{s.out}] = {s.reduce}_incoming(e[{s.msg}]"
+                f"{scale})")
+    if isinstance(s, NodeCompute):
+        return f"for n: n[{s.out}] = {render_expr(s.expr)}"
+    return repr(s)
+
+
+# ---------------------------------------------------------------------------
 # program
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class Program:
-    """An RGNN layer as inter-operator IR + decoupled layout annotations."""
+    """An RGNN layer as inter-operator IR + decoupled layout annotations.
+
+    ``source`` (optional, filled by the tracing frontend) maps statement
+    index -> ``SourceLoc`` of the authoring model line; it is excluded from
+    structural equality and from the fingerprint, so a DSL-traced program
+    compares equal to its hand-built twin.
+    """
 
     stmts: List[Stmt]
     outputs: List[str]                       # node/edge vars returned
     layouts: Dict[str, Layout] = dataclasses.field(default_factory=dict)
     name: str = "rgnn_layer"
+    source: Optional[Dict[int, SourceLoc]] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def layout_of(self, var: str) -> Layout:
         return self.layouts.get(var, Layout.VANILLA)
 
     def clone(self) -> "Program":
         return Program(list(self.stmts), list(self.outputs),
-                       dict(self.layouts), self.name)
+                       dict(self.layouts), self.name,
+                       dict(self.source) if self.source else None)
+
+    def describe(self) -> str:
+        """Stable textual rendering: every statement, the outputs, and the
+        layout annotations. Two programs with identical semantics (and
+        identical var names) render identically."""
+        lines = [f"Program<{self.name}>"]
+        lines += ["  " + render_stmt(s) for s in self.stmts]
+        lines.append("  outputs: " + ", ".join(self.outputs))
+        if self.layouts:
+            lines.append("  layouts: " + ", ".join(
+                f"{k}={v.value}" for k, v in sorted(self.layouts.items())))
+        return "\n".join(lines)
+
+    def fingerprint(self) -> str:
+        """Structural-identity hash (hex). DSL-traced and hand-built
+        programs with the same statements/outputs/layouts/name fingerprint
+        identically; executor/tuning caches may key on it."""
+        return hashlib.sha256(self.describe().encode()).hexdigest()[:16]
 
     def weights(self) -> Dict[str, Weight]:
         out: Dict[str, Weight] = {}

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import hashlib
 from typing import List, Optional, Tuple
 
 from repro.core.ir import inter_op as iop
@@ -199,3 +200,18 @@ class Plan:
             else:
                 lines.append(f"  FALLBACK<{o.kid}> {type(o.stmt).__name__}")
         return "\n".join(lines)
+
+    def fingerprint(self) -> str:
+        """Structural-identity hash of the lowered plan: the rendered op
+        sequence plus the layout and weight tables. Plans lowered from
+        structurally identical programs (DSL-traced or hand-built)
+        fingerprint identically; the compiled executors fold this into
+        their compile-cache keys."""
+        parts = [
+            self.describe(),
+            repr(self.ops),   # full spec dataclass reprs (describe elides some fields)
+            repr(sorted((k, v.value) for k, v in self.layouts.items())),
+            repr(sorted((k, (tuple(w.shape), w.indexed_by))
+                        for k, w in self.weights.items())),
+        ]
+        return hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]

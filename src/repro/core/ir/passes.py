@@ -25,6 +25,7 @@ from typing import Collection, Dict, List, Optional, Tuple
 
 from repro.core.ir import inter_op as I
 from repro.core.ir import intra_op as O
+from repro.core.ir.validate import ProgramValidationError, check_var_refs  # noqa: F401 (re-exported)
 
 
 # ---------------------------------------------------------------------------
@@ -418,7 +419,13 @@ def lower_program(
     ``compact_vars`` (from the autotuner's materialization decisions)
     overrides the all-or-nothing ``compact`` flag with an explicit per-var
     COMPACT set; names must come from ``compactable_edge_vars``.
+
+    Malformed programs (e.g. an ``EdgeSoftmax``/``NodeAggregate`` reading
+    an edge var nobody wrote) raise ``ProgramValidationError`` naming the
+    missing var and the statement index, instead of a bare ``KeyError``
+    deep inside the lowering or the generated code.
     """
+    check_var_refs(prog)
     weights = dict(prog.weights())
     wprods: List[O.WeightProductSpec] = []
     if reorder:

@@ -1,8 +1,11 @@
-"""HectorModule — the public compile() entry point.
+"""HectorModule / HectorStack — the single-layer / multi-layer compilation
+units underneath the public ``hector.compile()`` facade
+(``repro.frontend``).
 
-Usage (the 51-lines-of-model-code experience of §4.1):
+Direct usage (the low-level per-layer API; most callers should go through
+``hector.compile`` instead):
 
-    prog = rgat_program(in_dim=64, out_dim=64)       # inter-operator IR
+    prog = rgat_program(in_dim=64, out_dim=64)       # traced inter-op IR
     mod = HectorModule(prog, graph, reorder=True, compact=True)
     params = mod.init(jax.random.key(0))
     out = mod.apply(params, {"feature": x})          # jitted generated code

@@ -1,0 +1,187 @@
+"""The unified ``hector.compile()`` front door.
+
+One call takes a model (a DSL ``ModelSpec``, a registry name like
+``"rgat"``, or any ``prog_fn(in_dim, out_dim, **kw) -> Program``) plus a
+``HeteroGraph`` and builds the whole stack the three drivers used to wire
+by hand: per-layer traced programs -> validated/lowered plans ->
+``HectorStack`` with the compiled whole-plan executors -> fanout sampler ->
+(optionally) the autotuner. The returned ``CompiledRGNN`` exposes the full
+lifecycle — ``init`` / ``apply`` (full graph) / ``apply_blocks`` (sampled
+mini-batch) / ``train_step`` (one compiled SGD step) — and delegates every
+other attribute to the underlying ``RGNNEngine``, so serving and training
+drivers run exclusively through this facade.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compile", "CompiledRGNN"]
+
+
+def _is_rng_key(x) -> bool:
+    """True for int seeds, typed keys (jax.random.key) and legacy uint32
+    [2] keys (jax.random.PRNGKey) — anything ``init`` can consume."""
+    if isinstance(x, int):
+        return True
+    if not isinstance(x, jax.Array):
+        return False
+    if jax.dtypes.issubdtype(x.dtype, jax.dtypes.prng_key):
+        return True
+    return x.dtype == jnp.uint32 and x.shape == (2,)
+
+
+class CompiledRGNN:
+    """A compiled multi-layer RGNN bound to one graph.
+
+    Thin facade over ``train.engine.RGNNEngine``: adds the unified
+    ``init/apply/apply_blocks/train_step`` surface and forwards everything
+    else (``make_loader``, ``tune_minibatch``, ``plans``, ``cfg``, ...) to
+    the engine, so it drops into ``SampledTrainer``/``FullGraphTrainer``
+    unchanged.
+    """
+
+    def __init__(self, engine, opt=None):
+        self.engine = engine
+        self._opt = opt
+
+    def __getattr__(self, name):
+        return getattr(self.engine, name)
+
+    # -- model surface --------------------------------------------------
+    def init(self, key: Union[jax.Array, int]):
+        """Initialize per-layer parameter pytrees (int seeds accepted)."""
+        if isinstance(key, int):
+            key = jax.random.key(key)
+        return self.engine.init_params(key)
+
+    def apply(self, params, feats) -> jnp.ndarray:
+        """Full-graph forward; ``feats`` is the [N, dim] input feature
+        array (or a ``{"feature": array}`` dict)."""
+        if isinstance(feats, dict):
+            feats = feats["feature"]
+        return self.engine.forward_full(params, feats)
+
+    def apply_blocks(self, params, mb, global_feats,
+                     compiled: bool = True) -> jnp.ndarray:
+        """Sampled mini-batch forward over a ``sampling.MiniBatch``;
+        returns one row per requested seed."""
+        return self.engine.forward_minibatch(params, mb, global_feats,
+                                             compiled=compiled)
+
+    # -- training surface -----------------------------------------------
+    def init_state(self, params_or_key, opt=None):
+        """Optimizer state for ``train_step``. ``opt`` (an
+        ``repro.optim.AdamW``, default lr=3e-3) is bound on first use."""
+        if opt is not None:
+            self._opt = opt
+        params = params_or_key
+        if _is_rng_key(params_or_key):
+            params = self.init(params_or_key)
+        return self._optimizer().init(params)
+
+    def train_step(self, state, mb, labels, global_feats):
+        """One compiled neighbor-sampled SGD step (block forward ->
+        per-seed cross-entropy -> backward -> optimizer update) behind the
+        signature compile cache. ``labels`` must align with the requested
+        seed order (``mb.seq.slice_labels``); returns
+        ``(new_state, {"loss", "accuracy"})``."""
+        exec_ = self._train_executor()
+        feats = {"feature": jnp.asarray(global_feats)[mb.input_ids]}
+        return exec_.grad_and_update(state, mb, jnp.asarray(labels), feats)
+
+    # -- internals -------------------------------------------------------
+    def _optimizer(self):
+        if self._opt is None:
+            from repro.optim import AdamW
+            self._opt = AdamW(learning_rate=3e-3)
+        return self._opt
+
+    def _train_executor(self):
+        # one compiled step per (plans, opt): shared with SampledTrainer
+        # through the engine-level cache
+        return self.engine.train_executor(self._optimizer())
+
+    def describe(self) -> str:
+        """The generated plans, one per layer (paper Fig. 5 inspection)."""
+        return "\n".join(p.describe() for p in self.engine.plans)
+
+    def __repr__(self) -> str:
+        cfg = self.engine.cfg
+        return (f"CompiledRGNN<{cfg.model_name}: {cfg.layers} layers, "
+                f"dims {cfg.dims}, backend {cfg.backend}>")
+
+
+def compile(  # noqa: A001 - deliberate: the hector.compile() front door
+    model,
+    graph,
+    *,
+    layers: int = 2,
+    dim: int = 64,
+    hidden: int = 64,
+    classes: int = 16,
+    sample: Optional[Union[int, Sequence[int]]] = None,
+    backend: str = "xla",
+    tile: int = 32,
+    node_block: int = 32,
+    bucket: bool = True,
+    activation: str = "relu",
+    seed: int = 0,
+    tune: str = "off",
+    tune_cache: Optional[str] = None,
+    tune_full_graph: bool = True,
+    opt=None,
+    config=None,
+    log=None,
+    model_args: Optional[dict] = None,
+    **model_kwargs,
+) -> CompiledRGNN:
+    """Compile ``model`` for ``graph`` and return a ``CompiledRGNN``.
+
+    ``model``: a ``@hector.model`` ``ModelSpec``, a registry name
+    (``"rgcn" | "rgat" | "hgt" | ...``), or any callable
+    ``(in_dim, out_dim, **hparams) -> ir.inter_op.Program``. Model
+    hyperparameters ride along as extra keyword arguments (or via
+    ``model_args={...}`` when a name collides with a compile kwarg, e.g.
+    a model-level ``activation``).
+
+    ``sample``: per-hop neighbor fanout for the mini-batch paths — an int
+    (same fanout every hop), a per-layer sequence, or ``-1`` for full
+    neighborhoods. ``tune`` in {"off", "cached", "full"} runs the
+    autotuner exactly as the drivers' ``--tune`` flag does.
+
+    ``config``: a prebuilt ``train.engine.EngineConfig`` (overrides every
+    other compilation kwarg; ``model`` still wins if non-None).
+    """
+    import dataclasses
+
+    from repro.train.engine import EngineConfig, RGNNEngine
+
+    if config is not None:
+        cfg = config if model is None else \
+            dataclasses.replace(config, model=model)
+    else:
+        if isinstance(sample, int):
+            sample = [sample] * layers
+        prog_fn = model
+        model_kwargs = {**(model_args or {}), **model_kwargs}
+        if model_kwargs:
+            import functools
+
+            from repro.train.engine import MODEL_PROGRAMS
+            if isinstance(model, str) and model not in MODEL_PROGRAMS:
+                raise ValueError(f"unknown model {model!r}; "
+                                 f"have {sorted(MODEL_PROGRAMS)}")
+            base = MODEL_PROGRAMS[model] if isinstance(model, str) else model
+            prog_fn = functools.partial(base, **model_kwargs)
+            prog_fn.name = getattr(base, "name",
+                                   getattr(base, "__name__", "custom"))
+        cfg = EngineConfig(
+            model=prog_fn, layers=layers, dim=dim, hidden=hidden,
+            classes=classes, fanouts=sample, backend=backend, tile=tile,
+            node_block=node_block, bucket=bucket, activation=activation,
+            seed=seed, tune=tune, tune_cache=tune_cache,
+            tune_full_graph=tune_full_graph)
+    return CompiledRGNN(RGNNEngine(graph, cfg, log=log), opt=opt)

@@ -26,11 +26,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import hector
 from repro.core.graph import CPU_REDUCED_SCALES as REDUCED_SCALES
 from repro.core.graph import table3_graph
 from repro.sampling import SeedStream
-from repro.train.engine import (MODEL_PROGRAMS, EngineConfig, RGNNEngine,
-                                parse_fanout)
+from repro.train.engine import MODEL_PROGRAMS, parse_fanout
 
 
 def serve(
@@ -76,17 +76,19 @@ def serve(
     feats = jnp.asarray(rng.normal(size=(graph.num_nodes, dim)), jnp.float32)
     t_graph = time.perf_counter() - t0
 
-    engine = RGNNEngine(graph, EngineConfig(
-        model=model, layers=layers, dim=dim, hidden=hidden, classes=classes,
-        fanouts=fanouts, backend=backend, tile=tile, node_block=node_block,
-        bucket=bucket, seed=seed, tune=tune, tune_cache=tune_cache,
-        tune_full_graph=False), log=log)
+    # the unified front door: program -> plans -> compiled stack -> sampler
+    # (+ tuner), one call (frontend/compile.py)
+    engine = hector.compile(
+        model, graph, layers=layers, dim=dim, hidden=hidden,
+        classes=classes, sample=fanouts, backend=backend, tile=tile,
+        node_block=node_block, bucket=bucket, seed=seed, tune=tune,
+        tune_cache=tune_cache, tune_full_graph=False, log=log)
     fanouts = engine.cfg.fanouts
     log(f"[serve_rgnn] {model} on {dataset} (scale {scale}): "
         f"{graph.num_nodes} nodes, {graph.num_edges} edges, "
         f"{graph.num_etypes} etypes; fanouts={fanouts} "
         f"(graph build {t_graph:.2f}s)")
-    params = engine.init_params(jax.random.key(seed))
+    params = engine.init(jax.random.key(seed))
 
     if tune != "off":
         # block-scale tuning on one representative (bucketed) mini-batch,
@@ -129,8 +131,8 @@ def serve(
             if len(lat) == warmup_batches:
                 traces_at_warmup = executor.trace_count
             t0 = time.perf_counter()
-            logits = engine.forward_minibatch(params, mb, feats,
-                                              compiled=compiled)
+            logits = engine.apply_blocks(params, mb, feats,
+                                         compiled=compiled)
             logits.block_until_ready()
             t_fwd = time.perf_counter() - t0
             lat.append(t_wait + t_fwd)

@@ -23,12 +23,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import hector
 from repro.core.graph import (CPU_REDUCED_SCALES, synthetic_heterograph,
                               table3_graph)
 from repro.optim import AdamW, cosine_schedule
 from repro.sampling import EpochSeedStream
-from repro.train import (EngineConfig, MODEL_PROGRAMS, RGNNEngine,
-                         SampledTrainer, parse_fanout)
+from repro.train import (EngineConfig, MODEL_PROGRAMS, SampledTrainer,
+                         parse_fanout)
 
 # synthetic default workload (the example trainer's graph); --reduced scale
 SYNTHETIC = dict(num_nodes=2000, num_edges=16000, num_ntypes=4,
@@ -54,8 +55,10 @@ def build_task(dataset: str, scale: float, cfg: EngineConfig, seed: int,
     rng = np.random.default_rng(seed)
     feats = jnp.asarray(rng.normal(size=(graph.num_nodes, cfg.dim)),
                         jnp.float32)
-    engine = RGNNEngine(graph, cfg)
-    teacher = engine.init_params(jax.random.key(seed + 1))
+    # the unified front door (frontend/compile.py) builds program -> plans
+    # -> compiled stack -> sampler (+ tuner) from the prebuilt config
+    engine = hector.compile(None, graph, config=cfg)
+    teacher = engine.init(jax.random.key(seed + 1))
     labels = np.asarray(jnp.argmax(engine.forward_full(teacher, feats), -1))
     perm = rng.permutation(graph.num_nodes)
     n_val = int(graph.num_nodes * val_frac)
@@ -116,7 +119,7 @@ def train(
                 weight_decay=weight_decay)
     trainer = SampledTrainer(engine, feats, labels, train_ids, val_ids,
                              opt=opt, ckpt_dir=ckpt_dir, log=log)
-    state = trainer.init_state(engine.init_params(jax.random.key(seed)))
+    state = trainer.init_state(engine.init(jax.random.key(seed)))
 
     if tune != "off":
         # block-scale tuning on one representative training batch (bucketed

@@ -62,6 +62,20 @@ def rgcn_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
     return {"h_out": act(h)}
 
 
+def rgcn_cat_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
+                     activation: str = "relu", per_type_loop: bool = False):
+    """Concat-combine RGCN variant (models/zoo.py): concat(agg, self) @ W_out."""
+    x = feats["feature"]
+    msg = _maybe_loop(x[gt.src], params["W_rel"], gt.etype, per_type_loop)
+    agg = compat.segment_sum(msg, gt.dst, gt.num_nodes)
+    deg = (gt.dst_ptr[1:] - gt.dst_ptr[:-1]).astype(agg.dtype)
+    agg = agg / jnp.maximum(deg, 1.0)[:, None]
+    h = jnp.concatenate([agg, x @ params["W_self"]], axis=-1)
+    h = h @ params["W_out"]
+    act = {"relu": jax.nn.relu, "tanh": jnp.tanh}[activation]
+    return {"h_out": act(h)}
+
+
 def rgat_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
                  slope: float = 0.01, per_type_loop: bool = False):
     x = feats["feature"]
@@ -93,4 +107,5 @@ def hgt_vanilla(params: Dict, gt: GraphTensors, feats: Dict,
     return {"h_out": out}
 
 
-VANILLA = {"rgcn": rgcn_vanilla, "rgat": rgat_vanilla, "hgt": hgt_vanilla}
+VANILLA = {"rgcn": rgcn_vanilla, "rgat": rgat_vanilla, "hgt": hgt_vanilla,
+           "rgcn_cat": rgcn_cat_vanilla}

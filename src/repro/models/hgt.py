@@ -1,4 +1,4 @@
-"""Single-headed HGT layer in Hector inter-operator IR (paper Fig. 2).
+"""Single-headed HGT layer in the Hector authoring DSL (paper Fig. 2).
 
     k_n  = h_n W_K[τ(n)]          (nodewise typed linear, ntype segments)
     q_n  = h_n W_Q[τ(n)]
@@ -8,32 +8,35 @@
     msg  = v_src W_M[τ(e)]        (COMPACT)
     att  = softmax_dst( (katt · q_dst) / sqrt(d) )
     h_v' = Σ_e att_e · msg_e
+
+The traced program is statement-for-statement identical to the
+hand-assembled IR this module used to build (pinned by
+tests/test_frontend.py).
 """
 import math
 
+from repro import frontend as hector
 from repro.core.ir import inter_op as I
 
 
+@hector.model
+def hgt(g, e, n, in_dim, out_dim):
+    W_K = g.weight("W_K", (in_dim, out_dim), indexed_by="ntype")
+    W_Q = g.weight("W_Q", (in_dim, out_dim), indexed_by="ntype")
+    W_V = g.weight("W_V", (in_dim, out_dim), indexed_by="ntype")
+    W_A = g.weight("W_att", (out_dim, out_dim), indexed_by="etype")
+    W_M = g.weight("W_msg", (out_dim, out_dim), indexed_by="etype")
+    n["kk"] = n["feature"] @ W_K
+    n["qq"] = n["feature"] @ W_Q
+    n["vv"] = n["feature"] @ W_V
+    e["katt"] = e.src["kk"] @ W_A
+    e["msg"] = e.src["vv"] @ W_M
+    e["att_raw"] = hector.dot(e["katt"], e.dst["qq"]) * (1.0 / math.sqrt(out_dim))
+    e["att"] = hector.edge_softmax(e["att_raw"])
+    n["h_out"] = hector.aggregate(e["msg"], scale=e["att"])
+    return n["h_out"]
+
+
 def hgt_program(in_dim: int, out_dim: int) -> I.Program:
-    W_K = I.Weight("W_K", (in_dim, out_dim), indexed_by="ntype")
-    W_Q = I.Weight("W_Q", (in_dim, out_dim), indexed_by="ntype")
-    W_V = I.Weight("W_V", (in_dim, out_dim), indexed_by="ntype")
-    W_A = I.Weight("W_att", (out_dim, out_dim), indexed_by="etype")
-    W_M = I.Weight("W_msg", (out_dim, out_dim), indexed_by="etype")
-    inv_sqrt_d = 1.0 / math.sqrt(out_dim)
-    stmts = [
-        I.NodeCompute("kk", I.TypedLinear(I.NodeFeature("feature"), W_K)),
-        I.NodeCompute("qq", I.TypedLinear(I.NodeFeature("feature"), W_Q)),
-        I.NodeCompute("vv", I.TypedLinear(I.NodeFeature("feature"), W_V)),
-        I.EdgeCompute("katt", I.TypedLinear(I.SrcFeature("kk"), W_A)),
-        I.EdgeCompute("msg", I.TypedLinear(I.SrcFeature("vv"), W_M)),
-        I.EdgeCompute(
-            "att_raw",
-            I.Binary("mul",
-                     I.DotProduct(I.EdgeVar("katt"), I.DstFeature("qq")),
-                     I.Scalar(inv_sqrt_d)),
-        ),
-        I.EdgeSoftmax("att", "att_raw"),
-        I.NodeAggregate("h_out", msg="msg", scale="att"),
-    ]
-    return I.Program(stmts=stmts, outputs=["h_out"], name="hgt")
+    """Thin wrapper: trace the DSL model into inter-operator IR."""
+    return hgt(in_dim, out_dim)

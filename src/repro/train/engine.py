@@ -21,11 +21,12 @@ import jax.numpy as jnp
 
 from repro.core.graph import HeteroGraph
 from repro.core.module import HectorStack
-from repro.models import hgt_program, rgat_program, rgcn_program
+from repro.models import (hgt_program, rgat_program, rgcn_cat_program,
+                          rgcn_program)
 from repro.sampling import FanoutSampler, MiniBatchLoader
 
 MODEL_PROGRAMS = {"rgcn": rgcn_program, "rgat": rgat_program,
-                  "hgt": hgt_program}
+                  "hgt": hgt_program, "rgcn_cat": rgcn_cat_program}
 
 
 def parse_fanout(spec: str, layers: int) -> List[int]:
@@ -45,6 +46,10 @@ def parse_fanout(spec: str, layers: int) -> List[int]:
 class EngineConfig:
     """Model/compilation configuration shared by serving and training.
 
+    ``model`` is a registry name (``MODEL_PROGRAMS``), a DSL-authored
+    ``frontend.ModelSpec``, or any ``prog_fn(in_dim, out_dim) -> Program``
+    — the ``hector.compile`` facade passes whichever the user handed it.
+
     ``tune`` selects the autotuning mode (``repro.tune``): ``off`` keeps the
     static lowering defaults, ``cached`` replays persisted decisions with
     zero measurements, ``full`` measures whatever the persistent cache
@@ -53,7 +58,7 @@ class EngineConfig:
     decision.
     """
 
-    model: str = "rgat"
+    model: Union[str, Callable] = "rgat"
     layers: int = 2
     dim: int = 64
     hidden: int = 64
@@ -73,9 +78,14 @@ class EngineConfig:
     tune_full_graph: bool = True
 
     def __post_init__(self):
-        if self.model not in MODEL_PROGRAMS:
-            raise ValueError(f"unknown model {self.model!r}; "
-                             f"have {sorted(MODEL_PROGRAMS)}")
+        if isinstance(self.model, str):
+            if self.model not in MODEL_PROGRAMS:
+                raise ValueError(f"unknown model {self.model!r}; "
+                                 f"have {sorted(MODEL_PROGRAMS)}")
+        elif not callable(self.model):
+            raise ValueError(
+                f"model must be a registry name or a program factory "
+                f"(@hector.model / prog_fn); got {type(self.model).__name__}")
         if self.tune not in ("off", "cached", "full"):
             raise ValueError(f"tune={self.tune!r}; pick off/cached/full")
         self.fanouts = list(self.fanouts) if self.fanouts is not None \
@@ -87,6 +97,13 @@ class EngineConfig:
     def dims(self) -> List[int]:
         return [self.dim] + [self.hidden] * (self.layers - 1) + [self.classes]
 
+    @property
+    def model_name(self) -> str:
+        if isinstance(self.model, str):
+            return self.model
+        return getattr(self.model, "name", None) \
+            or getattr(self.model, "__name__", "custom")
+
 
 class RGNNEngine:
     """One multi-layer RGNN compiled for one graph, ready for both
@@ -97,7 +114,8 @@ class RGNNEngine:
     def __init__(self, graph: HeteroGraph, cfg: EngineConfig, log=None):
         self.graph = graph
         self.cfg = cfg
-        prog_fn = MODEL_PROGRAMS[cfg.model]
+        prog_fn = MODEL_PROGRAMS[cfg.model] if isinstance(cfg.model, str) \
+            else cfg.model
         dims = cfg.dims
         programs = [prog_fn(dims[i], dims[i + 1]) for i in range(cfg.layers)]
 
@@ -129,6 +147,10 @@ class RGNNEngine:
             compact_vars=compact_vars, decisions=self.decisions,
         )
         self.sampler = FanoutSampler(graph, cfg.fanouts, seed=cfg.seed)
+        # compiled sampled-train-step executors, one per optimizer instance
+        # (shared by the hector.compile facade and SampledTrainer so the
+        # same (plans, opt) pair never compiles twice)
+        self._train_execs = {}
 
     # ------------------------------------------------------------------
     @property
@@ -151,6 +173,25 @@ class RGNNEngine:
 
     def init_params(self, key: jax.Array):
         return self.stack.init(key)
+
+    def train_executor(self, opt):
+        """The compiled sampled SGD step (``BlockTrainExecutor``) for this
+        engine's plans and ``opt``. Cached per optimizer instance (bounded:
+        oldest entries evicted, so optimizer sweeps cannot grow memory
+        without bound); a decision-table swap after (re)tuning is
+        propagated instead of compiling a second executor."""
+        from repro.core import executor
+        ex = self._train_execs.get(id(opt))
+        if ex is None:
+            ex = executor.BlockTrainExecutor(
+                self.plans, opt, backend=self.cfg.backend,
+                activation=self.cfg.activation, decisions=self.decisions)
+            self._train_execs[id(opt)] = ex
+            while len(self._train_execs) > 4:   # insertion-ordered
+                self._train_execs.pop(next(iter(self._train_execs)))
+        if ex.decisions is not self.decisions:
+            ex.set_decisions(self.decisions)
+        return ex
 
     # ------------------------------------------------------------------
     def make_loader(

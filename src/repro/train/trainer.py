@@ -121,9 +121,9 @@ class SampledTrainer:
         self.prefetch_depth = prefetch_depth
         self.log = log or _quiet
         self.ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
-        self.step_exec = executor.BlockTrainExecutor(
-            engine.plans, self.opt, backend=engine.cfg.backend,
-            activation=engine.cfg.activation, decisions=engine.decisions)
+        # shared with the hector.compile facade: same opt -> same compiled
+        # step (engine.train_executor caches per optimizer instance)
+        self.step_exec = engine.train_executor(self.opt)
         # full-graph evaluator shares the optimizer (its update path is
         # unused for eval) and the engine's plans/layouts
         self.full = FullGraphTrainer(engine, feats, labels, train_ids,

@@ -1,4 +1,5 @@
-"""Compiler-pass unit tests: reordering, compaction, lowering structure."""
+"""Compiler-pass unit tests: reordering, compaction, lowering structure,
+and construction-time validation of malformed programs."""
 import pytest
 
 from repro.core.ir import inter_op as I
@@ -6,6 +7,7 @@ from repro.core.ir import intra_op as O
 from repro.core.ir.passes import (
     apply_compact_materialization, lower_program, reorder_linear_ops,
 )
+from repro.core.ir.validate import ProgramValidationError
 from repro.models import hgt_program, rgat_program, rgcn_program
 
 
@@ -90,3 +92,96 @@ def test_traversal_fusion_single_region():
     trav = [op for op in plan.ops if isinstance(op, O.TraversalSpec)][0]
     kinds = [s.kind for s in trav.stmts]
     assert "segment_max" in kinds and "segment_sum" in kinds
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation (no more bare KeyErrors in the lowering)
+# ---------------------------------------------------------------------------
+def test_lower_rejects_undefined_softmax_src():
+    """An EdgeSoftmax reading an edge var nobody wrote used to KeyError
+    deep inside codegen; now it is a named error with the statement index
+    and the missing var."""
+    prog = I.Program(
+        stmts=[I.EdgeSoftmax("att", "scores"),
+               I.NodeAggregate("h", msg="att")],
+        outputs=["h"], name="bad")
+    with pytest.raises(ProgramValidationError) as ei:
+        lower_program(prog)
+    msg = str(ei.value)
+    assert "undefined edge var 'scores'" in msg
+    assert "statement 0" in msg and "'bad'" in msg
+    assert ei.value.stmt_index == 0
+
+
+def test_lower_rejects_undefined_aggregate_msg():
+    W = I.Weight("W", (8, 8), indexed_by="etype")
+    prog = I.Program(
+        stmts=[I.EdgeCompute("hs", I.TypedLinear(I.SrcFeature("feature"), W)),
+               I.NodeAggregate("h", msg="mgs", scale=None)],   # typo'd var
+        outputs=["h"], name="bad")
+    with pytest.raises(ProgramValidationError) as ei:
+        lower_program(prog)
+    msg = str(ei.value)
+    assert "undefined edge var 'mgs'" in msg
+    assert "edge vars defined so far: hs" in msg
+    assert ei.value.stmt_index == 1
+
+
+def test_lower_rejects_undefined_aggregate_scale():
+    W = I.Weight("W", (8, 8), indexed_by="etype")
+    prog = I.Program(
+        stmts=[I.EdgeCompute("hs", I.TypedLinear(I.SrcFeature("feature"), W)),
+               I.NodeAggregate("h", msg="hs", scale="att")],
+        outputs=["h"], name="bad")
+    with pytest.raises(ProgramValidationError, match="undefined edge var "
+                                                     "'att'"):
+        lower_program(prog)
+
+
+def test_lower_rejects_undefined_edge_var_in_node_compute():
+    """Referential checks cover node statements too: a NodeCompute reading
+    an edge var nobody wrote must not slip through to codegen."""
+    prog = I.Program(
+        stmts=[I.NodeCompute("h", I.Binary("add", I.EdgeVar("ghost"),
+                                           I.Scalar(1.0)))],
+        outputs=["h"], name="bad")
+    with pytest.raises(ProgramValidationError,
+                       match="undefined edge var 'ghost'"):
+        lower_program(prog)
+
+
+def test_lower_rejects_unassigned_output():
+    W = I.Weight("W", (8, 8), indexed_by="etype")
+    prog = I.Program(
+        stmts=[I.EdgeCompute("hs", I.TypedLinear(I.SrcFeature("feature"), W))],
+        outputs=["h_out"], name="bad")
+    with pytest.raises(ProgramValidationError,
+                       match="output 'h_out' is never assigned"):
+        lower_program(prog)
+
+
+# ---------------------------------------------------------------------------
+# Program.describe() / fingerprint (stable structural identity)
+# ---------------------------------------------------------------------------
+def test_program_describe_stable_across_clone():
+    prog = hgt_program(8, 8)
+    assert prog.clone().describe() == prog.describe()
+    assert prog.clone().fingerprint() == prog.fingerprint()
+
+
+def test_program_fingerprint_sensitivity():
+    base = rgat_program(8, 8)
+    assert base.fingerprint() == rgat_program(8, 8).fingerprint()
+    assert base.fingerprint() != rgat_program(8, 16).fingerprint()
+    assert base.fingerprint() != rgat_program(8, 8, slope=0.2).fingerprint()
+    # layout annotations are part of the structural identity
+    marked = apply_compact_materialization(base)
+    assert marked.fingerprint() != base.fingerprint()
+
+
+def test_plan_fingerprint_tracks_lowering_choices():
+    a = lower_program(rgat_program(8, 8), reorder=True, compact=True)
+    b = lower_program(rgat_program(8, 8), reorder=True, compact=True)
+    c = lower_program(rgat_program(8, 8), reorder=False, compact=True)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.fingerprint() != c.fingerprint()
