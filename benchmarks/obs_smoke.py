@@ -1,0 +1,154 @@
+"""Observability smoke: serve + train with tracing on, schema-validated.
+
+Runs one short serving loop and one short sampled-training loop with the
+full telemetry surface enabled (metrics registry + span tracer + JSON
+exports), then validates every artifact:
+
+* the Chrome-trace JSON parses and conforms to the trace-event schema
+  (``repro.obs.schema.validate_trace``),
+* every registered phase span is present with nonzero duration
+  (``sample`` / ``layout`` / ``execute`` for serving, ``sample`` /
+  ``layout`` / ``train_step`` for training),
+* the metrics snapshot conforms to the registry schema and carries the
+  counters/histograms the CI gates read (executor traces, latency
+  histograms).
+
+``--ci`` turns validation problems into a failing exit code — the CI step
+that keeps the telemetry layer honest (a silently-empty trace or metrics
+export is a regression even when serving itself still works).
+
+    PYTHONPATH=src python -m benchmarks.obs_smoke --ci
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import List
+
+from benchmarks.common import csv_row
+
+SERVE_CONFIG = dict(
+    model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
+    classes=4, fanouts=[3, 3], batch_size=8, num_batches=4, tile=8,
+    node_block=8, seed=0,
+)
+TRAIN_CONFIG = dict(
+    model="rgat", dataset="synthetic", scale=0.05, layers=2, dim=8,
+    hidden=8, classes=4, fanouts=[3, 3], batch_size=16, epochs=1, tile=8,
+    node_block=8, eval_every_epochs=0, seed=0,
+)
+SERVE_PHASES = ("sample", "layout", "execute")
+TRAIN_PHASES = ("sample", "layout", "train_step")
+
+
+def _quiet(*_a, **_k):
+    pass
+
+
+def _validate(kind: str, trace_path: str, metrics_path: str,
+              phases) -> List[str]:
+    from repro.obs import schema
+
+    problems: List[str] = []
+    try:
+        trace = json.load(open(trace_path))
+    except Exception as e:  # noqa: BLE001 - any unreadable artifact fails
+        return [f"{kind}: unreadable trace {trace_path}: {e!r}"]
+    try:
+        metrics = json.load(open(metrics_path))
+    except Exception as e:  # noqa: BLE001
+        return [f"{kind}: unreadable metrics {metrics_path}: {e!r}"]
+    problems += [f"{kind} trace: {p}" for p in schema.validate_trace(trace)]
+    problems += [f"{kind} trace: {p}"
+                 for p in schema.require_phases(trace, phases)]
+    problems += [f"{kind} metrics: {p}"
+                 for p in schema.validate_metrics(metrics)]
+    return problems
+
+
+def run(out=print, workdir=None):
+    """Serve + train with tracing, validate the artifacts; returns
+    ``(problems, serve_stats, train_stats)``."""
+    from repro.launch.serve_rgnn import serve
+    from repro.launch.train_rgnn import train
+    from repro.obs.registry import (snapshot_counter_total,
+                                    snapshot_histogram)
+
+    workdir = workdir or tempfile.mkdtemp(prefix="repro-obs-smoke-")
+    p = {k: os.path.join(workdir, f"{k}.json")
+         for k in ("serve_trace", "serve_metrics",
+                   "train_trace", "train_metrics")}
+
+    s_stats = serve(trace_out=p["serve_trace"],
+                    metrics_out=p["serve_metrics"], log=_quiet,
+                    **SERVE_CONFIG)
+    t_stats = train(trace_out=p["train_trace"],
+                    metrics_out=p["train_metrics"], log=_quiet,
+                    **TRAIN_CONFIG)
+
+    problems = _validate("serve", p["serve_trace"], p["serve_metrics"],
+                         SERVE_PHASES)
+    problems += _validate("train", p["train_trace"], p["train_metrics"],
+                          TRAIN_PHASES)
+
+    # the counters/histograms the CI gates and drivers report from must
+    # actually be populated, not merely schema-valid
+    if snapshot_counter_total(s_stats["metrics"], "executor_traces") <= 0:
+        problems.append("serve metrics: executor_traces counter empty")
+    sb = snapshot_histogram(s_stats["metrics"], "serve_batch_ms")
+    if not sb or sb["count"] != s_stats["batches"]:
+        problems.append(
+            f"serve metrics: serve_batch_ms recorded "
+            f"{sb['count'] if sb else 0} of {s_stats['batches']} batches")
+    tb = snapshot_histogram(t_stats["metrics"], "train_step_ms")
+    if not tb or tb["count"] != t_stats["steps"]:
+        problems.append(
+            f"train metrics: train_step_ms recorded "
+            f"{tb['count'] if tb else 0} of {t_stats['steps']} steps")
+
+    out(csv_row("obs_smoke/serve", s_stats["latency_ms_p50"] / 1e3,
+                f"p99_ms={s_stats['latency_ms_p99']:.1f};"
+                f"phases={len(SERVE_PHASES)};problems={len(problems)}"))
+    out(csv_row("obs_smoke/train", t_stats["step_ms_p50"] / 1e3,
+                f"p99_ms={t_stats['step_ms_p99']:.1f};"
+                f"phases={len(TRAIN_PHASES)};problems={len(problems)}"))
+    return problems, s_stats, t_stats
+
+
+def ci_check(workdir=None) -> None:
+    """Exit 1 if any telemetry artifact is invalid or any phase span is
+    missing/zero."""
+    problems, s_stats, _ = run(out=lambda *_: None, workdir=workdir)
+    if problems:
+        for pb in problems:
+            print(f"[obs_smoke --ci] FAIL: {pb}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[obs_smoke --ci] OK: serve phases {list(SERVE_PHASES)} + train "
+          f"phases {list(TRAIN_PHASES)} all present and nonzero; trace and "
+          f"metrics JSON schema-valid; p50 {s_stats['latency_ms_p50']:.1f} "
+          f"ms / p99 {s_stats['latency_ms_p99']:.1f} ms over "
+          f"{s_stats['batches']} served batches")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="fail (exit 1) on any schema/phase problem")
+    ap.add_argument("--workdir", default=None,
+                    help="directory for the exported artifacts "
+                         "(default: fresh temp dir)")
+    args = ap.parse_args(argv)
+    if args.ci:
+        ci_check(workdir=args.workdir)
+    else:
+        print("name,us_per_call,derived")
+        problems, _, _ = run(workdir=args.workdir)
+        for pb in problems:
+            print(f"[obs_smoke] problem: {pb}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,10 +13,14 @@ serve  — sampled mini-batch serving vs full-graph inference
 serve_cached — cache-hit-rate + per-batch latency of the cached serving path
 train_sampled — neighbor-sampled training step latency / epoch throughput
 tune_smoke — autotuner cold/warm persistent-cache invariants
+obs_smoke — telemetry artifacts (trace + metrics JSON) schema validation
 
 ``--json PATH`` (e.g. ``--json BENCH_table5.json``) additionally writes the
 rows machine-readably — ``{"name", "us_per_call", "derived": {k: v}}`` —
-so the perf trajectory is trackable across PRs without re-parsing CSV.
+plus the run's aggregate metrics-registry snapshot (every benchmark runs
+inside one ``obs.scope``, so nested driver scopes fold their counters and
+latency histograms upward), so the perf trajectory is trackable across PRs
+without re-parsing CSV.
 """
 import argparse
 import json
@@ -46,16 +50,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,table5,fig9,fig10,fig11,loc,"
-                         "serve,serve_cached,train_sampled,tune_smoke")
+                         "serve,serve_cached,train_sampled,tune_smoke,"
+                         "obs_smoke")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (e.g. BENCH_all.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (fig8_speedup, fig9_breakdown, fig10_memory,
-                            fig11_dims, loc_report, serve_cached,
+                            fig11_dims, loc_report, obs_smoke, serve_cached,
                             serve_sampled, table5_opts, train_sampled,
                             tune_smoke)
+    from repro import obs
 
     rows = []
 
@@ -77,15 +83,21 @@ def main() -> None:
         ("serve_cached", serve_cached.run),
         ("train_sampled", train_sampled.run),
         ("tune_smoke", tune_smoke.run),
+        ("obs_smoke", obs_smoke.run),
     ]
-    for name, fn in jobs:
-        if only and name not in only:
-            continue
-        try:
-            fn(out=emit)
-        except Exception as e:  # noqa: BLE001
-            print(f"{name},ERROR,{e!r}", file=sys.stderr)
-            raise
+    # one enclosing scope: every driver/benchmark scope folds its counters
+    # and histograms into this registry on exit, so the JSON snapshot is
+    # the union of the whole run's telemetry
+    with obs.scope(metrics=True) as sc:
+        for name, fn in jobs:
+            if only and name not in only:
+                continue
+            try:
+                fn(out=emit)
+            except Exception as e:  # noqa: BLE001
+                print(f"{name},ERROR,{e!r}", file=sys.stderr)
+                raise
+        metrics_snapshot = sc.registry.snapshot()
 
     if args.json:
         import jax
@@ -93,6 +105,7 @@ def main() -> None:
             "schema_version": 1,
             "backend": jax.default_backend(),
             "rows": rows,
+            "metrics": metrics_snapshot,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)

@@ -47,8 +47,20 @@ def run(out=print, backend: str = "xla", num_batches: int = NUM_BATCHES):
 
 
 def ci_check(backend: str = "pallas_interpret") -> None:
-    """Interpret-mode retracing/caching regression gate (exit 1 on failure)."""
+    """Interpret-mode retracing/caching regression gate (exit 1 on failure).
+
+    All counters are read from the run's metrics-registry snapshot
+    (``stats["metrics"]``) — the obs layer is the one surface for cache and
+    trace telemetry, not the executor/loader internals."""
+    from repro.obs.registry import snapshot_counter_total, snapshot_value
+
     _, cached = run(out=lambda *_: None, backend=backend)
+    m = cached["metrics"]
+    traces = snapshot_counter_total(m, "executor_traces")
+    block_hits = snapshot_value(m, "loader_cache_hits",
+                                cache="block_cache") or 0
+    block_misses = snapshot_value(m, "loader_cache_misses",
+                                  cache="block_cache") or 0
     n_repeats = NUM_BATCHES - DISTINCT
     failures = []
     if cached["retraces_after_warmup"] != 0:
@@ -57,31 +69,31 @@ def ci_check(backend: str = "pallas_interpret") -> None:
             f"warmup (expected 0)")
     # steady state: one compiled trace per shape bucket, every later batch a
     # compile-cache hit
-    if cached["executor_traces"] != cached["executor_compiled"]:
+    if traces != cached["executor_compiled"]:
         failures.append(
-            f"trace count {cached['executor_traces']} != compiled entries "
+            f"trace count {traces} != compiled entries "
             f"{cached['executor_compiled']} (each bucket must trace once)")
-    if cached["executor_traces"] > DISTINCT:
+    if traces > DISTINCT:
         failures.append(
-            f"{cached['executor_traces']} traces for {DISTINCT} distinct "
+            f"{traces} traces for {DISTINCT} distinct "
             f"batches (bucketing regressed)")
     # every repeated seed batch must come from the sampled-block cache, i.e.
     # zero host-side sampling/KernelLayouts work for repeats
-    if cached["block_cache_misses"] != DISTINCT:
+    if block_misses != DISTINCT:
         failures.append(
-            f"{cached['block_cache_misses']} block-cache misses for "
+            f"{block_misses} block-cache misses for "
             f"{DISTINCT} distinct batches")
-    if cached["block_cache_hits"] != n_repeats:
+    if block_hits != n_repeats:
         failures.append(
-            f"{cached['block_cache_hits']} block-cache hits, expected "
+            f"{block_hits} block-cache hits, expected "
             f"{n_repeats} (a repeat rebuilt its layouts host-side)")
     if failures:
         for f in failures:
             print(f"[serve_cached --ci] FAIL: {f}", file=sys.stderr)
         raise SystemExit(1)
-    print(f"[serve_cached --ci] OK: {cached['executor_traces']} traces for "
+    print(f"[serve_cached --ci] OK: {traces} traces for "
           f"{NUM_BATCHES} batches ({DISTINCT} distinct), 0 retraces after "
-          f"warmup, {cached['block_cache_hits']}/{n_repeats} repeats served "
+          f"warmup, {block_hits}/{n_repeats} repeats served "
           f"from the block cache")
 
 

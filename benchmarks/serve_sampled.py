@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_graph, csv_row, time_fn
+from repro import obs
 from repro.core.module import HectorStack
 from repro.models import rgat_program
 from repro.sampling import FanoutSampler, MiniBatchLoader, SeedStream
@@ -23,13 +24,16 @@ DATASETS = ["aifb", "mutag"]
 
 
 def _sampled_latency(stack, params, feats, graph, fanouts, batch_size,
-                     warmup=6, iters=8, tile=32, node_block=32):
+                     bench, warmup=6, iters=8, tile=32, node_block=32):
     sampler = FanoutSampler(graph, fanouts, seed=0)
     loader = MiniBatchLoader(
         sampler, SeedStream(graph.num_nodes, batch_size, seed=0),
         tile=tile, node_block=node_block, bucket=True,
         num_batches=warmup + iters,
     )
+    # per-batch latency lands in a registry histogram (labeled per bench
+    # point) so the caller reports p50/p99, not just a central tendency
+    h = obs.metrics().histogram("serve_batch_ms", bench=bench)
     times = []
     try:
         for i, mb in enumerate(loader):
@@ -37,7 +41,9 @@ def _sampled_latency(stack, params, feats, graph, fanouts, batch_size,
             out = stack.apply_blocks(params, mb, feats, compiled=True)
             out.block_until_ready()
             if i >= warmup:
-                times.append(time.perf_counter() - t0)
+                dt = time.perf_counter() - t0
+                times.append(dt)
+                h.observe(dt * 1e3)
     finally:
         loader.close()
     return float(np.median(times))
@@ -45,24 +51,31 @@ def _sampled_latency(stack, params, feats, graph, fanouts, batch_size,
 
 def run(datasets=None, d=64, batch_size=64, out=print):
     datasets = datasets or DATASETS
-    for ds in datasets:
-        hg = bench_graph(ds)
-        rng = np.random.default_rng(0)
-        feats = jnp.asarray(rng.normal(size=(hg.num_nodes, d)), jnp.float32)
-        stack = HectorStack([rgat_program(d, d), rgat_program(d, 16)], hg,
-                            tile=32, node_block=32, jit=False)
-        params = stack.init(jax.random.key(0))
+    with obs.scope(metrics=True):
+        for ds in datasets:
+            hg = bench_graph(ds)
+            rng = np.random.default_rng(0)
+            feats = jnp.asarray(rng.normal(size=(hg.num_nodes, d)),
+                                jnp.float32)
+            stack = HectorStack([rgat_program(d, d), rgat_program(d, 16)],
+                                hg, tile=32, node_block=32, jit=False)
+            params = stack.init(jax.random.key(0))
 
-        t_full = time_fn(lambda: stack.apply(params, {"feature": feats}))
-        out(csv_row(f"serve/{ds}/full_graph", t_full,
-                    f"nodes={hg.num_nodes}"))
+            t_full = time_fn(lambda: stack.apply(params, {"feature": feats}))
+            out(csv_row(f"serve/{ds}/full_graph", t_full,
+                        f"nodes={hg.num_nodes}"))
 
-        for fanout in (5, 10):
-            t_s = _sampled_latency(stack, params, feats, hg,
-                                   [fanout, fanout], batch_size)
-            out(csv_row(
-                f"serve/{ds}/sampled_f{fanout}_b{batch_size}", t_s,
-                f"seeds_per_s={batch_size / max(t_s, 1e-9):.0f}"))
+            for fanout in (5, 10):
+                bench = f"{ds}_f{fanout}_b{batch_size}"
+                t_s = _sampled_latency(stack, params, feats, hg,
+                                       [fanout, fanout], batch_size,
+                                       bench=bench)
+                hs = obs.metrics().histogram_summary("serve_batch_ms",
+                                                     bench=bench)
+                out(csv_row(
+                    f"serve/{ds}/sampled_f{fanout}_b{batch_size}", t_s,
+                    f"seeds_per_s={batch_size / max(t_s, 1e-9):.0f};"
+                    f"p50_ms={hs['p50']:.2f};p99_ms={hs['p99']:.2f}"))
 
 
 if __name__ == "__main__":

@@ -213,25 +213,36 @@ def execute_plan(
     """
     env = _Env(plan, gt, params, feats)
     derived: Dict[str, jnp.ndarray] = {}
-
-    def weight(name: str) -> jnp.ndarray:
-        return derived.get(name, env.params.get(name))
-
     for op in plan.ops:
-        if isinstance(op, O.WeightProductSpec):
-            wm, wv = env.params[op.w_matrix], env.params[op.w_vector]
-            # (x W_r) · w_r == x (W_r w_r^T): hoisted weight-weight BMM
-            derived[op.out] = jnp.einsum("rdf,rf->rd", wm, wv)[..., None]
-        elif isinstance(op, O.GemmSpec):
-            _exec_gemm(op, env, weight, gt, kl, backend, decisions)
-        elif isinstance(op, O.TraversalSpec):
-            _exec_traversal(op, env, gt, kl, backend, decisions)
-        elif isinstance(op, O.FallbackSpec):
-            raise NotImplementedError(
-                f"fallback op {op.stmt} reached the executor; add a jnp "
-                f"lowering for it"
-            )
+        execute_op(op, env, derived, gt, kl, backend, decisions)
     return {name: env.get(name) for name in plan.outputs}
+
+
+def execute_op(op, env: _Env, derived: Dict[str, jnp.ndarray],
+               gt: GraphTensors, kl: KernelLayouts, backend: str = "xla",
+               decisions=None) -> None:
+    """Execute ONE lowered op spec against the environment — the loop body
+    of ``execute_plan``, factored out so the obs profiler can advance a
+    plan op by op and time each instance individually.
+
+    ``derived`` carries hoisted weight products (``WeightProductSpec``
+    outputs) that later GEMMs resolve before the parameter table.
+    """
+    if isinstance(op, O.WeightProductSpec):
+        wm, wv = env.params[op.w_matrix], env.params[op.w_vector]
+        # (x W_r) · w_r == x (W_r w_r^T): hoisted weight-weight BMM
+        derived[op.out] = jnp.einsum("rdf,rf->rd", wm, wv)[..., None]
+    elif isinstance(op, O.GemmSpec):
+        _exec_gemm(op, env,
+                   lambda name: derived.get(name, env.params.get(name)),
+                   gt, kl, backend, decisions)
+    elif isinstance(op, O.TraversalSpec):
+        _exec_traversal(op, env, gt, kl, backend, decisions)
+    elif isinstance(op, O.FallbackSpec):
+        raise NotImplementedError(
+            f"fallback op {op.stmt} reached the executor; add a jnp "
+            f"lowering for it"
+        )
 
 
 # ---------------------------------------------------------------------------

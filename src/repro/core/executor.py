@@ -27,6 +27,7 @@ from typing import Dict, List, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import codegen
 
 
@@ -77,6 +78,14 @@ class _CachedExecutor:
     def _traced(self, *args):
         raise NotImplementedError
 
+    def _count_trace(self) -> None:
+        """Called from inside the traced functions: counts actual
+        (re)traces. Runs at trace time on the host — never inside the
+        compiled executable — so the obs mirror adds no per-call cost."""
+        self.trace_count += 1
+        obs.metrics().counter("executor_traces",
+                              executor=type(self).__name__).inc()
+
     def _call(self, *args):
         fp = self.decisions.fingerprint() if self.decisions is not None \
             else None
@@ -84,11 +93,15 @@ class _CachedExecutor:
         fn = self._cache.get(key)
         if fn is None:
             self.cache_misses += 1
+            obs.metrics().counter("executor_cache_misses",
+                                  executor=type(self).__name__).inc()
             donate = self._donate_argnums if self._donate else ()
             fn = jax.jit(self._traced, donate_argnums=donate)
             self._cache[key] = fn
         else:
             self.cache_hits += 1
+            obs.metrics().counter("executor_cache_hits",
+                                  executor=type(self).__name__).inc()
         return fn(*args)
 
     @property
@@ -125,7 +138,7 @@ class PlanExecutor(_CachedExecutor):
         self.backend = backend
 
     def _traced(self, params, gt, kl, feats):
-        self.trace_count += 1
+        self._count_trace()
         return codegen.execute_plan(self.plan, params, gt, feats, kl,
                                     self.backend, self.decisions)
 
@@ -153,7 +166,7 @@ class BlockExecutor(_CachedExecutor):
         self.activation = activation
 
     def _traced(self, params, gts, kls, dst_locals, seed_perm, feats):
-        self.trace_count += 1
+        self._count_trace()
         return codegen.execute_block_sequence(
             self.plans, params, gts, kls, dst_locals, seed_perm, feats,
             backend=self.backend, activation=self.activation,
@@ -213,7 +226,7 @@ class BlockTrainExecutor(_CachedExecutor):
         self.activation = activation
 
     def _traced(self, state, gts, kls, dst_locals, seed_perm, labels, feats):
-        self.trace_count += 1
+        self._count_trace()
 
         def loss_fn(params):
             logits = codegen.execute_block_sequence(
@@ -276,7 +289,7 @@ class StackTrainExecutor(_CachedExecutor):
         return h
 
     def _traced(self, state, gt, kl, idx, labels, feats):
-        self.trace_count += 1
+        self._count_trace()
 
         def loss_fn(params):
             h = self._forward(params, gt, kl, feats)

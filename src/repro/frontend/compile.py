@@ -92,6 +92,21 @@ class CompiledRGNN:
         feats = {"feature": jnp.asarray(global_feats)[mb.input_ids]}
         return exec_.grad_and_update(state, mb, jnp.asarray(labels), feats)
 
+    # -- observability ---------------------------------------------------
+    def profile(self, params, mb, global_feats, *, warmup: int = 1,
+                iters: int = 3):
+        """Per-op kernel-time breakdown (the paper's Fig.-9 view) of one
+        sampled mini-batch through this model's compiled block path.
+
+        Steps the lowered plans op instance by op instance and times each
+        in isolation on the tuner's measurement harness, next to the
+        whole-plan compiled time. Returns an ``obs.profile.PlanProfile``
+        (``.table()`` renders the breakdown, ``.to_json()`` exports it)."""
+        from repro.obs import profile as _prof
+        return _prof.profile_minibatch(self.engine, params, mb,
+                                       global_feats, warmup=warmup,
+                                       iters=iters)
+
     # -- internals -------------------------------------------------------
     def _optimizer(self):
         if self._opt is None:

@@ -20,6 +20,7 @@ steady-state zero-retrace invariant).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import numpy as np
@@ -27,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 import hector
+from repro import obs
 from repro.core.graph import CPU_REDUCED_SCALES as REDUCED_SCALES
 from repro.core.graph import table3_graph
 from repro.sampling import SeedStream
@@ -57,6 +59,10 @@ def serve(
     warmup_batches=None,
     tune: str = "off",
     tune_cache=None,
+    obs_mode: str = "on",
+    trace_out=None,
+    metrics_out=None,
+    profile: bool = False,
     log=print,
 ):
     """Run the serving loop; returns a stats dict (used by tests/benchmarks).
@@ -65,10 +71,43 @@ def serve(
     (power-law repeat traffic). ``warmup_batches`` (default: ``repeat_after``
     or 2) splits the trace accounting: compiles during warmup are expected,
     any after it count as ``retraces_after_warmup``.
+
+    Observability: with ``obs_mode="on"`` the call runs inside an
+    ``obs.scope`` — latency histograms and cache/trace counters land in a
+    metrics registry whose snapshot is returned as ``stats["metrics"]``
+    (and written to ``metrics_out`` if given). ``trace_out`` additionally
+    enables phase tracing (``sample``/``layout``/``execute`` spans) and
+    writes a Chrome-trace JSON there. ``profile=True`` runs the per-op
+    plan profiler on the last served mini-batch and attaches the breakdown
+    as ``stats["profile"]``. ``obs_mode="off"`` serves with observability
+    fully disabled (the <2%-overhead baseline).
     """
     if warmup_batches is None:
         warmup_batches = repeat_after if repeat_after else 2
     warmup_batches = min(warmup_batches, num_batches)
+
+    with contextlib.ExitStack() as stack:
+        sc = None
+        if obs_mode == "off":
+            stack.enter_context(obs.disabled())
+        else:
+            sc = stack.enter_context(obs.scope(
+                metrics=True, tracing=trace_out is not None))
+        return _serve_scoped(
+            sc, model, dataset, scale, layers, dim, hidden, classes,
+            fanouts, batch_size, num_batches, backend, tile, node_block,
+            bucket, seed, prefetch_depth, cache_blocks, cache_layouts,
+            repeat_after, compiled, warmup_batches, tune, tune_cache,
+            trace_out, metrics_out, profile, log)
+
+
+def _serve_scoped(
+    sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
+    batch_size, num_batches, backend, tile, node_block, bucket, seed,
+    prefetch_depth, cache_blocks, cache_layouts, repeat_after, compiled,
+    warmup_batches, tune, tune_cache, trace_out, metrics_out, profile,
+    log,
+):
 
     t0 = time.perf_counter()
     graph = table3_graph(dataset, scale=scale, seed=seed)
@@ -115,22 +154,30 @@ def serve(
     )
 
     executor = engine.block_executor
+    metrics = obs.metrics()
+    h_lat = metrics.histogram("serve_batch_ms")
+    h_wait = metrics.histogram("serve_wait_ms")
+    h_compute = metrics.histogram("serve_compute_ms")
     lat, waits, computes, preds = [], [], [], None
     edges_seen = 0
     retraces_after_warmup = 0
     traces_at_warmup = None
+    last_mb = None
     t_serve0 = time.perf_counter()
     try:
         while True:
             t0 = time.perf_counter()
-            try:
-                mb = next(loader)
-            except StopIteration:
-                break
+            with obs.span("wait", batch=len(lat)):
+                try:
+                    mb = next(loader)
+                except StopIteration:
+                    break
             t_wait = time.perf_counter() - t0
             if len(lat) == warmup_batches:
                 traces_at_warmup = executor.trace_count
             t0 = time.perf_counter()
+            # engine.apply_blocks opens the "execute" span (with a device
+            # sync inside it when tracing is on)
             logits = engine.apply_blocks(params, mb, feats,
                                          compiled=compiled)
             logits.block_until_ready()
@@ -138,8 +185,12 @@ def serve(
             lat.append(t_wait + t_fwd)
             waits.append(t_wait)
             computes.append(t_fwd)
+            h_lat.observe((t_wait + t_fwd) * 1e3)
+            h_wait.observe(t_wait * 1e3)
+            h_compute.observe(t_fwd * 1e3)
             edges_seen += sum(gt.num_edges for gt in mb.tensors)
             preds = np.asarray(jnp.argmax(logits, axis=-1))
+            last_mb = mb
             hops = "+".join(str(b.num_src) for b in mb.seq.blocks)
             log(f"[serve_rgnn] batch {mb.step}: wait {t_wait*1e3:6.1f} ms, "
                 f"forward {t_fwd*1e3:6.1f} ms  (block nodes {hops})")
@@ -158,6 +209,7 @@ def serve(
         "batch_size": batch_size,
         "latency_ms_p50": float(np.percentile(lat_arr, 50) * 1e3),
         "latency_ms_p95": float(np.percentile(lat_arr, 95) * 1e3),
+        "latency_ms_p99": float(np.percentile(lat_arr, 99) * 1e3),
         "latency_ms_mean": float(lat_arr.mean() * 1e3),
         "wait_ms_mean": float(np.mean(waits) * 1e3),
         "compute_ms_mean": float(np.mean(computes) * 1e3),
@@ -170,6 +222,13 @@ def serve(
         "executor_compiled": executor.num_compiled,
         "retraces_after_warmup": retraces_after_warmup,
     }
+    if obs.metrics_enabled():
+        # registry-sourced latency percentiles (the reservoir keeps every
+        # sample at this scale, so these match the array-side numbers)
+        hs = metrics.histogram_summary("serve_batch_ms")
+        stats["latency_ms_p50"] = hs["p50"]
+        stats["latency_ms_p95"] = hs["p95"]
+        stats["latency_ms_p99"] = hs["p99"]
     for k, v in engine.tuner_stats.items():
         stats[f"tune_{k}"] = v
     for name, cs in loader.cache_stats().items():
@@ -178,7 +237,8 @@ def serve(
         stats[f"{name}_hit_rate"] = cs["hit_rate"]
     log(f"[serve_rgnn] served {n} batches x {batch_size} seeds: "
         f"latency p50 {stats['latency_ms_p50']:.1f} ms / "
-        f"p95 {stats['latency_ms_p95']:.1f} ms "
+        f"p95 {stats['latency_ms_p95']:.1f} ms / "
+        f"p99 {stats['latency_ms_p99']:.1f} ms "
         f"(wait {stats['wait_ms_mean']:.1f} + "
         f"compute {stats['compute_ms_mean']:.1f} ms avg), "
         f"throughput {stats['seeds_per_s']:.1f} seeds/s, "
@@ -189,6 +249,27 @@ def serve(
         + "".join(f", {k.removesuffix('_hit_rate')} hit rate {v:.0%}"
                   for k, v in stats.items() if k.endswith("_hit_rate")))
     log(f"[serve_rgnn] sample predictions: {preds[:12].tolist()}")
+
+    if profile and last_mb is not None:
+        from repro.obs import profile as prof_mod
+        p = engine.profile(params, last_mb, feats, warmup=1, iters=5) \
+            if hasattr(engine, "profile") else \
+            prof_mod.profile_minibatch(engine, params, last_mb, feats,
+                                       warmup=1, iters=5)
+        log("[serve_rgnn] per-op kernel breakdown (last batch):\n"
+            + p.table())
+        stats["profile"] = p.to_json()
+
+    if sc is not None:
+        if sc.tracer is not None:
+            log("[serve_rgnn] phase table:\n" + sc.tracer.phase_table())
+            if trace_out:
+                sc.tracer.write(trace_out)
+                log(f"[serve_rgnn] chrome trace -> {trace_out}")
+        stats["metrics"] = sc.registry.snapshot()
+        if metrics_out:
+            sc.registry.export(metrics_out)
+            log(f"[serve_rgnn] metrics snapshot -> {metrics_out}")
     return stats
 
 
@@ -222,9 +303,12 @@ def main(argv=None):
     ap.add_argument("--cache-layouts", type=int, default=0,
                     help="LRU capacity of the KernelLayouts cache keyed by "
                          "block signature; 0 disables")
-    ap.add_argument("--repeat-after", type=int, default=None,
+    ap.add_argument("--repeat-after", type=int, default=4,
                     help="wrap the seed stream onto N distinct batches "
-                         "(models power-law repeat traffic)")
+                         "(models power-law repeat traffic — the production "
+                         "serving assumption; every distinct batch compiles "
+                         "during warmup, so steady state retraces zero "
+                         "times). 0 = fresh random seeds every batch")
     ap.add_argument("--eager", action="store_true",
                     help="bypass the whole-plan compiled executor (op-by-op "
                          "debug path)")
@@ -236,6 +320,19 @@ def main(argv=None):
     ap.add_argument("--tune-cache", default=None,
                     help="persistent tuning-cache path (default "
                          "$REPRO_TUNE_CACHE or ~/.cache/repro-tune.json)")
+    ap.add_argument("--obs", default="on", choices=["on", "off"],
+                    help="observability: 'on' runs inside an obs scope "
+                         "(metrics registry + stats['metrics']); 'off' is "
+                         "the zero-instrumentation baseline")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable phase tracing and write a Chrome-trace "
+                         "JSON (load in chrome://tracing or Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot JSON here")
+    ap.add_argument("--profile", action="store_true",
+                    help="after serving, time every op instance of the "
+                         "compiled plan individually (per-op kernel "
+                         "breakdown on the last batch)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -254,8 +351,10 @@ def main(argv=None):
         backend=args.backend, tile=args.tile, node_block=args.node_block,
         bucket=not args.no_bucket, seed=args.seed,
         cache_blocks=args.cache_blocks, cache_layouts=args.cache_layouts,
-        repeat_after=args.repeat_after, compiled=not args.eager,
+        repeat_after=args.repeat_after or None, compiled=not args.eager,
         tune=args.tune, tune_cache=args.tune_cache,
+        obs_mode=args.obs, trace_out=args.trace_out,
+        metrics_out=args.metrics_out, profile=args.profile,
     )
 
 

@@ -18,12 +18,14 @@ mirroring the paper's sampled-vs-dense training comparison.
 from __future__ import annotations
 
 import argparse
+import contextlib
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 import hector
+from repro import obs
 from repro.core.graph import (CPU_REDUCED_SCALES, synthetic_heterograph,
                               table3_graph)
 from repro.optim import AdamW, cosine_schedule
@@ -95,10 +97,46 @@ def train(
     parity_tol: float = 0.05,
     tune: str = "off",
     tune_cache=None,
+    obs_mode: str = "on",
+    trace_out=None,
+    metrics_out=None,
+    profile: bool = False,
     log=print,
 ):
     """Run the sampled training loop; returns a stats dict (used by tests
-    and the ``train_sampled`` benchmark)."""
+    and the ``train_sampled`` benchmark).
+
+    Observability mirrors ``serve_rgnn``: with ``obs_mode="on"`` the run is
+    wrapped in an ``obs.scope`` (per-step latency histograms, cache/trace
+    counters, ``stats["metrics"]`` snapshot, optional ``metrics_out``
+    export); ``trace_out`` additionally enables phase tracing
+    (``sample``/``layout``/``train_step`` spans) and writes a Chrome-trace
+    JSON. ``profile=True`` attributes one fused compiled SGD step into
+    forward / backward / optimizer via ``obs.profile.profile_train_step``
+    (host spans cannot split a single jitted callable).
+    """
+    with contextlib.ExitStack() as stack:
+        sc = None
+        if obs_mode == "off":
+            stack.enter_context(obs.disabled())
+        else:
+            sc = stack.enter_context(obs.scope(
+                metrics=True, tracing=trace_out is not None))
+        return _train_scoped(
+            sc, model, dataset, scale, layers, dim, hidden, classes,
+            fanouts, batch_size, epochs, lr, weight_decay, warmup_steps,
+            backend, tile, node_block, bucket, seed, val_frac, ckpt_dir,
+            ckpt_every, resume, eval_every_epochs, parity, parity_tol,
+            tune, tune_cache, trace_out, metrics_out, profile, log)
+
+
+def _train_scoped(
+    sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
+    batch_size, epochs, lr, weight_decay, warmup_steps, backend, tile,
+    node_block, bucket, seed, val_frac, ckpt_dir, ckpt_every, resume,
+    eval_every_epochs, parity, parity_tol, tune, tune_cache, trace_out,
+    metrics_out, profile, log,
+):
     cfg = EngineConfig(model=model, layers=layers, dim=dim, hidden=hidden,
                        classes=classes, fanouts=fanouts, backend=backend,
                        tile=tile, node_block=node_block, bucket=bucket,
@@ -198,6 +236,43 @@ def train(
             raise SystemExit(
                 f"sampled {split} loss {sampled_loss:.4f} not within "
                 f"{parity_tol:.0%} of full-graph {fg_loss:.4f}")
+
+    if profile:
+        # forward/backward/optimizer attribution of ONE fused compiled
+        # step, on a representative (bucketed) batch off the epoch stream
+        from repro.obs import profile as prof_mod
+        warm_seeds = np.sort(np.random.default_rng(seed + 2).choice(
+            train_ids, size=min(batch_size, len(train_ids)),
+            replace=False)).astype(np.int32)
+        pl = engine.make_loader(lambda step: warm_seeds, num_batches=1,
+                                depth=1)
+        try:
+            mb = next(pl)
+        finally:
+            pl.close()
+        ph = prof_mod.profile_train_step(
+            engine.plans, trainer.opt, state, mb,
+            mb.seq.slice_labels(labels),
+            {"feature": feats[mb.input_ids]},
+            backend=engine.cfg.backend, activation=engine.cfg.activation,
+            decisions=engine.decisions, warmup=1, iters=5)
+        log(f"[train_rgnn] step attribution: "
+            f"forward {ph['forward']*1e3:.2f} ms, "
+            f"backward {ph['backward']*1e3:.2f} ms, "
+            f"optimizer {ph['optimizer']*1e3:.2f} ms "
+            f"(fused step {ph['total']*1e3:.2f} ms)")
+        stats["profile"] = {k: v * 1e3 for k, v in ph.items()}
+
+    if sc is not None:
+        if sc.tracer is not None:
+            log("[train_rgnn] phase table:\n" + sc.tracer.phase_table())
+            if trace_out:
+                sc.tracer.write(trace_out)
+                log(f"[train_rgnn] chrome trace -> {trace_out}")
+        stats["metrics"] = sc.registry.snapshot()
+        if metrics_out:
+            sc.registry.export(metrics_out)
+            log(f"[train_rgnn] metrics snapshot -> {metrics_out}")
     return stats
 
 
@@ -246,6 +321,18 @@ def main(argv=None):
     ap.add_argument("--tune-cache", default=None,
                     help="persistent tuning-cache path (default "
                          "$REPRO_TUNE_CACHE or ~/.cache/repro-tune.json)")
+    ap.add_argument("--obs", default="on", choices=["on", "off"],
+                    help="observability: 'on' runs inside an obs scope "
+                         "(metrics registry + stats['metrics']); 'off' is "
+                         "the zero-instrumentation baseline")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable phase tracing and write a Chrome-trace "
+                         "JSON (load in chrome://tracing or Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot JSON here")
+    ap.add_argument("--profile", action="store_true",
+                    help="attribute one fused compiled SGD step into "
+                         "forward / backward / optimizer phases")
     args = ap.parse_args(argv)
 
     if args.scale is not None:
@@ -268,6 +355,8 @@ def main(argv=None):
         resume=args.resume, eval_every_epochs=args.eval_every_epochs,
         parity=args.parity, parity_tol=args.parity_tol,
         tune=args.tune, tune_cache=args.tune_cache,
+        obs_mode=args.obs, trace_out=args.trace_out,
+        metrics_out=args.metrics_out, profile=args.profile,
     )
 
 

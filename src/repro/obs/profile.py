@@ -1,0 +1,471 @@
+"""Per-op plan profiler: a Fig.-9-style kernel-time breakdown.
+
+The paper's headline evidence is a per-kernel time attribution (Fig. 9).
+This module reproduces that view for any compiled plan by **prefix
+differencing**: the jitted prefix of ops ``0..i`` is timed on the tuner's
+measurement harness (``tune.tuner.measure_group`` — compile + warmup, then
+iterations interleaved round-robin across every prefix so clock drift
+cancels out of the differences), and op *i* is charged
+``t(prefix_i) - t(prefix_{i-1})``.
+
+Why prefixes and not isolated per-op timing: the production executors run
+the whole plan as ONE jitted callable, where XLA fuses across op
+boundaries and dead-code-eliminates intermediates no later op reads. An op
+timed in isolation pays its own dispatch and materializes everything it
+writes, so isolated times can sum to far more than the fused whole — the
+breakdown would not add up. Prefix differences telescope: their sum IS the
+whole-plan time (up to measurement noise and clamping of negative diffs),
+so the attribution is consistent with the end-to-end number by
+construction. Each prefix returns only its **live frontier** — the values
+ops beyond the cut actually read (recorded by stepping the plan eagerly
+through ``codegen.execute_op`` with read tracking) — so a prefix performs
+exactly the fused work the full plan has performed by that point.
+
+Entry points:
+
+* ``profile_plan``           — one lowered plan on one graph
+* ``profile_block_sequence`` — a sampled mini-batch through all hops (the
+  serving hot path; what ``CompiledRGNN.profile(...)`` and
+  ``launch/serve_rgnn.py --profile`` render)
+* ``profile_minibatch``      — convenience entry over an engine + MiniBatch
+* ``profile_train_step``     — forward / backward / optimizer attribution
+  for the fused compiled SGD step (phases host-side spans cannot split,
+  because the whole step is one jitted callable)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Set
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codegen
+from repro.core.ir import intra_op as O
+from repro.tune.tuner import measure_group
+
+
+def _op_label(op) -> str:
+    if isinstance(op, O.GemmSpec):
+        return f"gemm:{op.out}[{op.gather.name.lower()}]"
+    if isinstance(op, O.TraversalSpec):
+        kinds = {s.kind for s in op.stmts}
+        tag = "softmax" if "segment_max" in kinds else \
+            "agg" if "segment_sum" in kinds else "ew"
+        return f"traversal:{op.stmts[-1].out}[{tag}]"
+    if isinstance(op, O.WeightProductSpec):
+        return f"wprod:{op.out}"
+    return type(op).__name__
+
+
+def _op_category(op) -> str:
+    if isinstance(op, O.GemmSpec):
+        return "gemm"
+    if isinstance(op, O.TraversalSpec):
+        return "traversal"
+    if isinstance(op, O.WeightProductSpec):
+        return "wprod"
+    return "other"
+
+
+@dataclasses.dataclass
+class OpTime:
+    """One attributed op instance. ``seconds`` is the prefix difference
+    (clamped at 0); ``prefix_seconds`` the cumulative fused time of the
+    plan up to and including this op."""
+
+    index: int
+    category: str         # gemm | traversal | wprod | glue
+    label: str
+    seconds: float
+    prefix_seconds: float
+    hop: int = 0
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class PlanProfile:
+    """Per-op breakdown of one plan (or a block sequence of plans — then
+    ``ops`` carries entries from every hop, tagged by ``hop``)."""
+
+    ops: List[OpTime]
+    total_seconds: float          # whole plan/sequence, same harness
+    backend: str
+
+    @property
+    def sum_op_seconds(self) -> float:
+        return sum(o.seconds for o in self.ops)
+
+    @property
+    def coverage(self) -> float:
+        """sum(per-op) / whole-plan. Telescoping makes this ~1.0; drift
+        beyond noise means the attribution disagrees with the end-to-end
+        measurement."""
+        return self.sum_op_seconds / self.total_seconds \
+            if self.total_seconds > 0 else float("nan")
+
+    def by_category(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.ops:
+            out[o.category] = out.get(o.category, 0.0) + o.seconds
+        return out
+
+    def table(self) -> str:
+        """The Fig.-9-style breakdown: one row per op instance, fraction
+        of the attributed total, then category subtotals and the coverage
+        ratio against the whole-plan measurement."""
+        tot = max(self.sum_op_seconds, 1e-12)
+        lines = [f"{'op':<40} {'hop':>3} {'time us':>10} {'frac':>6}"]
+        for o in self.ops:
+            lines.append(f"{o.label:<40} {o.hop:>3} "
+                         f"{o.seconds * 1e6:>10.1f} "
+                         f"{o.seconds / tot:>6.1%}")
+        lines.append("-" * 62)
+        for cat, t in sorted(self.by_category().items(),
+                             key=lambda kv: -kv[1]):
+            lines.append(f"{cat:<44} {t * 1e6:>10.1f} {t / tot:>6.1%}")
+        lines.append(
+            f"{'sum(ops)':<44} {self.sum_op_seconds * 1e6:>10.1f}")
+        lines.append(
+            f"{'whole plan':<44} {self.total_seconds * 1e6:>10.1f}   "
+            f"(coverage {self.coverage:.0%})")
+        return "\n".join(lines)
+
+    def to_json(self) -> dict:
+        return {
+            "backend": self.backend,
+            "total_us": self.total_seconds * 1e6,
+            "sum_op_us": self.sum_op_seconds * 1e6,
+            "coverage": self.coverage,
+            "by_category_us": {k: v * 1e6
+                               for k, v in self.by_category().items()},
+            "ops": [o.to_json() for o in self.ops],
+        }
+
+
+# ---------------------------------------------------------------------------
+# read/write recording (liveness for the prefix frontiers)
+# ---------------------------------------------------------------------------
+class _RecordingEnv(codegen._Env):
+    """Environment that records which previously-written names each op
+    reads (only names present in ``vals`` count — params and scalars are
+    always available and never attributed)."""
+
+    def __init__(self, plan, gt, params, feats):
+        super().__init__(plan, gt, params, feats)
+        self.reads: Set[str] = set()
+
+    def get(self, name: str):
+        if name in self.vals:
+            self.reads.add(name)
+        return super().get(name)
+
+
+class _RecordingDict(dict):
+    """Derived-weight-product table that records key reads."""
+
+    def __init__(self):
+        super().__init__()
+        self.reads: Set[str] = set()
+
+    def get(self, k, default=None):
+        if k in self:
+            self.reads.add(k)
+        return super().get(k, default)
+
+
+@dataclasses.dataclass
+class _OpRecord:
+    op: object
+    wrote_env: List[str]
+    wrote_der: List[str]
+    reads_env: Set[str]
+    reads_der: Set[str]
+
+
+def _record_plan(plan, params, gt, kl, feats, backend, decisions):
+    """Step the plan eagerly, recording per-op reads and writes; returns
+    (records, final env) — the liveness input for the prefix frontiers."""
+    env = _RecordingEnv(plan, gt, params, feats)
+    derived = _RecordingDict()
+    records: List[_OpRecord] = []
+    for op in plan.ops:
+        before_env = dict(env.vals)
+        before_der = dict(derived)
+        env.reads = set()
+        derived.reads = set()
+        codegen.execute_op(op, env, derived, gt, kl, backend, decisions)
+        records.append(_OpRecord(
+            op=op,
+            wrote_env=[k for k, v in env.vals.items()
+                       if before_env.get(k) is not v],
+            wrote_der=[k for k, v in derived.items()
+                       if before_der.get(k) is not v],
+            reads_env=env.reads,
+            reads_der=derived.reads,
+        ))
+    return records, env
+
+
+def _frontiers(records: List[_OpRecord], outputs: Sequence[str],
+               inputs: Sequence[str] = ()):
+    """For each cut i, the live frontier: names written by ops <= i that
+    are read by ops > i, or are plan outputs. ``inputs`` are names present
+    before op 0 (the layer's input features); a third list marks which of
+    them are still read past each cut — a prefix that drops a live input
+    from its outputs lets XLA dead-code-eliminate the upstream compute
+    that produced it. Returns three parallel lists of tuples (env names,
+    derived names, input names), one per op."""
+    n = len(records)
+    # reads strictly after cut i, computed right-to-left
+    after_env = [set() for _ in range(n)]
+    after_der = [set() for _ in range(n)]
+    reads_env_after: Set[str] = set(outputs)
+    reads_der_after: Set[str] = set()
+    for i in range(n - 1, -1, -1):
+        after_env[i] = set(reads_env_after)
+        after_der[i] = set(reads_der_after)
+        reads_env_after |= records[i].reads_env
+        reads_der_after |= records[i].reads_der
+    live_env, live_der, live_inp = [], [], []
+    written_env: Set[str] = set()
+    written_der: Set[str] = set()
+    inputs = set(inputs)
+    for i, r in enumerate(records):
+        written_env |= set(r.wrote_env)
+        written_der |= set(r.wrote_der)
+        live_env.append(tuple(sorted((written_env - inputs)
+                                     & after_env[i])))
+        live_der.append(tuple(sorted(written_der & after_der[i])))
+        live_inp.append(tuple(sorted(inputs & after_env[i])))
+    return live_env, live_der, live_inp
+
+
+def _isotonic(xs: Sequence[float]) -> List[float]:
+    """Monotone non-decreasing fit (pool adjacent violators). True prefix
+    times are non-decreasing by construction; a measured dip is noise.
+    Clamping each negative difference at 0 would one-sidedly inflate the
+    sum — pooling averages the dip with its neighbours instead, so the
+    fitted differences still telescope to (roughly) the final prefix."""
+    pools: List[List[float]] = []   # [sum, count]
+    for x in xs:
+        cur = [float(x), 1]
+        while pools and pools[-1][0] * cur[1] > cur[0] * pools[-1][1]:
+            prev = pools.pop()
+            cur = [prev[0] + cur[0], prev[1] + cur[1]]
+        pools.append(cur)
+    out: List[float] = []
+    for s, c in pools:
+        out.extend([s / c] * c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# single-plan profiling
+# ---------------------------------------------------------------------------
+def profile_plan(plan, params, gt, kl, feats, *, backend: str = "xla",
+                 decisions=None, warmup: int = 1,
+                 iters: int = 3) -> PlanProfile:
+    """Per-op breakdown of one lowered plan on one graph."""
+    records, _ = _record_plan(plan, params, gt, kl, feats, backend,
+                              decisions)
+    # the input features are jit arguments here, so they cannot be
+    # dead-code-eliminated — no need to carry them in the frontier
+    live_env, live_der, _ = _frontiers(records, plan.outputs)
+
+    def prefix_fn(upto):
+        le, ld = live_env[upto], live_der[upto]
+
+        def run(params_, gt_, kl_, feats_):
+            env = codegen._Env(plan, gt_, params_, feats_)
+            derived: Dict[str, jnp.ndarray] = {}
+            for op in plan.ops[:upto + 1]:
+                codegen.execute_op(op, env, derived, gt_, kl_, backend,
+                                   decisions)
+            return ([env.vals[k] for k in le]
+                    + [derived[k] for k in ld])
+        return run
+
+    args = (params, gt, kl, feats)
+    calls = [(jax.jit(prefix_fn(i)), args) for i in range(len(records))]
+    calls.append((jax.jit(lambda p, g, k, f: codegen.execute_plan(
+        plan, p, g, f, k, backend, decisions)), args))
+    times = measure_group(calls, warmup=warmup, iters=iters)
+    whole = times.pop()
+    fit = _isotonic(times)
+
+    ops: List[OpTime] = []
+    prev = 0.0
+    for i, (r, t, ft) in enumerate(zip(records, times, fit)):
+        ops.append(OpTime(index=i, category=_op_category(r.op),
+                          label=_op_label(r.op),
+                          seconds=max(ft - prev, 0.0), prefix_seconds=t))
+        prev = ft
+    return PlanProfile(ops=ops, total_seconds=whole, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# sampled block sequence (the serving hot path)
+# ---------------------------------------------------------------------------
+def profile_block_sequence(plans: Sequence, params: Sequence, gts, kls,
+                           dst_locals, seed_perm, feats, *,
+                           backend: str = "xla", activation: str = "relu",
+                           decisions=None, warmup: int = 1,
+                           iters: int = 3) -> PlanProfile:
+    """Per-op breakdown of one sampled mini-batch through every hop's
+    block — the exact computation ``BlockExecutor`` compiles, attributed
+    op instance by op instance via prefix differencing. The inter-hop
+    frontier narrowing + activation and the final seed gather appear as
+    ``glue`` rows."""
+    act = codegen._ACTIVATIONS[activation]
+    last = len(plans) - 1
+
+    # eager pass: per-hop read/write records + liveness frontiers
+    hop_recs, hop_live = [], []
+    cur = dict(feats)
+    for i, (plan, p, gt, kl) in enumerate(zip(plans, params, gts, kls)):
+        records, env = _record_plan(plan, p, gt, kl, cur, backend,
+                                    decisions)
+        hop_recs.append(records)
+        # the hop's sole downstream consumer is the glue, which reads the
+        # plan's first output. The hop *input* features must ride in the
+        # frontier too while later ops still read them: for hops > 0 they
+        # are the previous hops' computed output, and a prefix that drops
+        # them lets XLA dead-code-eliminate everything upstream — the
+        # prefix sequence stops telescoping.
+        hop_live.append(_frontiers(records, plan.outputs[:1],
+                                   inputs=["node:" + k for k in cur]))
+        h = env.get(plan.outputs[0])[dst_locals[i]]
+        if i < last:
+            cur = {"feature": act(h)}
+
+    # step list: every (hop, op) plus one glue step per hop
+    steps = []   # (hop, op_index | None for the hop's glue)
+    for i, records in enumerate(hop_recs):
+        steps += [(i, j) for j in range(len(records))]
+        steps.append((i, None))
+
+    def prefix_fn(upto):
+        cut_hop, cut_op = steps[upto]
+
+        def run(params_, gts_, kls_, dst_locals_, seed_perm_, feats_):
+            cur_ = dict(feats_)
+            for i in range(cut_hop + 1):
+                plan = plans[i]
+                env = codegen._Env(plan, gts_[i], params_[i], cur_)
+                derived: Dict[str, jnp.ndarray] = {}
+                n_ops = (len(plan.ops) if i < cut_hop or cut_op is None
+                         else cut_op + 1)
+                for op in plan.ops[:n_ops]:
+                    codegen.execute_op(op, env, derived, gts_[i], kls_[i],
+                                       backend, decisions)
+                if i == cut_hop and cut_op is not None:
+                    le = hop_live[i][0][cut_op]
+                    ld = hop_live[i][1][cut_op]
+                    # hop-0 inputs are jit arguments (cannot be DCEd);
+                    # later hops' inputs anchor the upstream hops' work
+                    li = hop_live[i][2][cut_op] if i > 0 else ()
+                    return ([env.vals[k] for k in le]
+                            + [derived[k] for k in ld]
+                            + [env.vals[k] for k in li])
+                h = env.get(plan.outputs[0])[dst_locals_[i]]
+                if i == last:
+                    return [h[seed_perm_]]
+                cur_ = {"feature": act(h)}
+            return [cur_["feature"]]
+        return run
+
+    args = (list(params), list(gts), list(kls), list(dst_locals),
+            seed_perm, feats)
+    calls = [(jax.jit(prefix_fn(s)), args) for s in range(len(steps))]
+    calls.append((jax.jit(
+        lambda p, g, k, d, s_, f: codegen.execute_block_sequence(
+            plans, p, g, k, d, s_, f, backend=backend,
+            activation=activation, decisions=decisions)), args))
+    times = measure_group(calls, warmup=warmup, iters=iters)
+    whole = times.pop()
+    fit = _isotonic(times)
+
+    ops: List[OpTime] = []
+    prev = 0.0
+    for (hop, op_idx), t, ft in zip(steps, times, fit):
+        if op_idx is None:
+            label = ("glue:narrow+seed_gather" if hop == last
+                     else f"glue:narrow+{activation}")
+            cat, idx = "glue", len(hop_recs[hop])
+        else:
+            r = hop_recs[hop][op_idx]
+            label, cat, idx = _op_label(r.op), _op_category(r.op), op_idx
+        ops.append(OpTime(index=idx, category=cat, label=label,
+                          seconds=max(ft - prev, 0.0), prefix_seconds=t,
+                          hop=hop))
+        prev = ft
+    return PlanProfile(ops=ops, total_seconds=whole, backend=backend)
+
+
+def profile_minibatch(engine, params, mb, global_feats, *,
+                      warmup: int = 1, iters: int = 3) -> PlanProfile:
+    """Convenience entry over an ``RGNNEngine``/``CompiledRGNN`` and a
+    ``sampling.MiniBatch`` (the loaders' device-ready bundle)."""
+    feats = {"feature": jnp.asarray(global_feats)[mb.input_ids]}
+    return profile_block_sequence(
+        engine.plans, list(params), list(mb.tensors), list(mb.layouts),
+        list(mb.dst_locals), mb.seed_perm, feats,
+        backend=engine.cfg.backend, activation=engine.cfg.activation,
+        decisions=engine.decisions, warmup=warmup, iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# fused train-step phase attribution
+# ---------------------------------------------------------------------------
+def profile_train_step(plans: Sequence, opt, state, mb, labels, feats, *,
+                       backend: str = "xla", activation: str = "relu",
+                       decisions=None, warmup: int = 1,
+                       iters: int = 3) -> Dict[str, float]:
+    """Forward / backward / optimizer attribution for the compiled sampled
+    SGD step. The production step is ONE jitted callable, so host spans
+    cannot split it; instead three nested computations are timed with the
+    same harness and differenced:
+
+        forward   = t(forward only)
+        backward  = t(value_and_grad) - forward
+        optimizer = t(full step)      - t(value_and_grad)
+
+    Returns seconds per phase plus the fused total (``total`` is the real
+    production step time; the three phases are the attribution).
+    """
+    from repro.core.executor import softmax_xent
+
+    gts, kls = list(mb.tensors), list(mb.layouts)
+    dst_locals, seed_perm = list(mb.dst_locals), mb.seed_perm
+    labels = jnp.asarray(labels)
+
+    def fwd(params, f):
+        return codegen.execute_block_sequence(
+            plans, params, gts, kls, dst_locals, seed_perm, f,
+            backend=backend, activation=activation, decisions=decisions)
+
+    def loss_fn(params, f):
+        return softmax_xent(fwd(params, f), labels)
+
+    def grad_fn(params, f):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, f)
+
+    def step_fn(state_, f):
+        (loss, acc), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state_.params, f)
+        return opt.update(grads, state_), loss, acc
+
+    t_fwd, t_grad, t_step = measure_group(
+        [(jax.jit(fwd), (state.params, feats)),
+         (jax.jit(grad_fn), (state.params, feats)),
+         (jax.jit(step_fn), (state, feats))],
+        warmup=warmup, iters=iters)
+    return {
+        "forward": t_fwd,
+        "backward": max(t_grad - t_fwd, 0.0),
+        "optimizer": max(t_step - t_grad, 0.0),
+        "total": t_step,
+    }

@@ -32,6 +32,7 @@ from typing import Callable, List, Optional, Union
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import codegen
 from repro.core.graph import GraphTensors, HeteroGraph
 from repro.kernels.layout import pow2ceil
@@ -41,12 +42,18 @@ from repro.sampling.sampler import BlockSequence, FanoutSampler
 
 class LRUCache:
     """Minimal LRU map with hit/miss/eviction counters (single-consumer:
-    each loader's producer thread owns its caches, so no locking)."""
+    each loader's producer thread owns its caches, so no locking).
 
-    def __init__(self, maxsize: int = 64):
+    ``name`` labels the cache in the obs metrics registry: every hit, miss,
+    and eviction is mirrored to ``loader_cache_{hits,misses,evictions}``
+    counters with a ``cache=<name>`` label when metrics are enabled (the
+    plain integer attributes remain the always-on source of truth)."""
+
+    def __init__(self, maxsize: int = 64, name: str = "lru"):
         if maxsize <= 0:
             raise ValueError("LRUCache needs a positive maxsize")
         self.maxsize = maxsize
+        self.name = name
         self._d: "collections.OrderedDict" = collections.OrderedDict()
         self.hits = 0
         self.misses = 0
@@ -57,9 +64,12 @@ class LRUCache:
             v = self._d.pop(key)
         except KeyError:
             self.misses += 1
+            obs.metrics().counter("loader_cache_misses",
+                                  cache=self.name).inc()
             return None
         self._d[key] = v          # re-insert: most recently used
         self.hits += 1
+        obs.metrics().counter("loader_cache_hits", cache=self.name).inc()
         return v
 
     def put(self, key, value) -> None:
@@ -68,6 +78,8 @@ class LRUCache:
         while len(self._d) > self.maxsize:
             self._d.popitem(last=False)
             self.evictions += 1
+            obs.metrics().counter("loader_cache_evictions",
+                                  cache=self.name).inc()
 
     def __len__(self) -> int:
         return len(self._d)
@@ -299,8 +311,10 @@ class MiniBatchLoader:
         self.node_block = node_block
         self.bucket = bucket
         self.num_batches = num_batches
-        self.block_cache = LRUCache(cache_blocks) if cache_blocks else None
-        self.layout_cache = LRUCache(cache_layouts) if cache_layouts else None
+        self.block_cache = LRUCache(cache_blocks, name="block_cache") \
+            if cache_blocks else None
+        self.layout_cache = LRUCache(cache_layouts, name="layout_cache") \
+            if cache_layouts else None
         self._fanout_key = tuple(
             tuple(int(x) for x in f) for f in sampler.fanouts)
         self.q: queue.Queue = queue.Queue(maxsize=depth)
@@ -329,10 +343,13 @@ class MiniBatchLoader:
             mb = self.block_cache.get(key)
             if mb is not None:
                 return dataclasses.replace(mb, step=step)
-        seq = self.sampler.sample(seeds, batch_index=step, epoch=epoch)
-        mb = build_minibatch(seq, step=step, tile=self.tile,
-                             node_block=self.node_block, bucket=self.bucket,
-                             layout_cache=self.layout_cache)
+        with obs.span("sample", step=step):
+            seq = self.sampler.sample(seeds, batch_index=step, epoch=epoch)
+        with obs.span("layout", step=step):
+            mb = build_minibatch(seq, step=step, tile=self.tile,
+                                 node_block=self.node_block,
+                                 bucket=self.bucket,
+                                 layout_cache=self.layout_cache)
         if self.block_cache is not None:
             self.block_cache.put(key, mb)
         return mb

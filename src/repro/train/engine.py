@@ -19,6 +19,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.graph import HeteroGraph
 from repro.core.module import HectorStack
 from repro.models import (hgt_program, rgat_program, rgcn_cat_program,
@@ -239,9 +240,12 @@ class RGNNEngine:
     def forward_minibatch(self, params, mb, global_feats,
                           compiled: bool = True) -> jnp.ndarray:
         """Sampled forward: per-seed outputs for a ``MiniBatch``."""
-        return self.stack.apply_blocks(params, mb, global_feats,
-                                       compiled=compiled)
+        with obs.span("execute", step=mb.step) as sp:
+            out = self.stack.apply_blocks(params, mb, global_feats,
+                                          compiled=compiled)
+            return sp.sync(out)
 
     def forward_full(self, params, feats: jnp.ndarray) -> jnp.ndarray:
         """Full-graph forward (compiled per layer via ``PlanExecutor``)."""
-        return self.stack.apply(params, {"feature": feats})
+        with obs.span("execute", mode="full_graph") as sp:
+            return sp.sync(self.stack.apply(params, {"feature": feats}))

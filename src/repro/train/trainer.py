@@ -28,6 +28,7 @@ from typing import Dict, List, Optional
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint import Checkpointer
 from repro.core import executor
 from repro.optim import AdamW, TrainState
@@ -193,10 +194,15 @@ class SampledTrainer:
                 labels_b = jnp.asarray(mb.seq.slice_labels(self.labels))
                 feats_b = {"feature": self.feats[mb.input_ids]}
                 t0 = time.perf_counter()
-                state, metrics = ex.grad_and_update(
-                    state, mb, labels_b, feats_b)
-                loss = float(metrics["loss"])   # syncs the step
-                step_times.append(time.perf_counter() - t0)
+                # the fused compiled step is one dispatch; forward/backward/
+                # optimizer attribution needs obs.profile.profile_train_step
+                with obs.span("train_step", step=step):
+                    state, metrics = ex.grad_and_update(
+                        state, mb, labels_b, feats_b)
+                    loss = float(metrics["loss"])   # syncs the step
+                dt = time.perf_counter() - t0
+                step_times.append(dt)
+                obs.metrics().histogram("train_step_ms").observe(dt * 1e3)
                 losses.append(loss)
                 accs.append(float(metrics["accuracy"]))
                 if log_every and (step + 1) % log_every == 0:
@@ -233,6 +239,8 @@ class SampledTrainer:
             "accuracies": accs,
             "final_loss": losses[-1] if losses else float("nan"),
             "step_ms_p50": float(np.percentile(step_times, 50) * 1e3)
+            if step_times else float("nan"),
+            "step_ms_p99": float(np.percentile(step_times, 99) * 1e3)
             if step_times else float("nan"),
             "seeds_per_s": stream.batch_size * n / max(t_total, 1e-9),
             "executor_traces": ex.trace_count,

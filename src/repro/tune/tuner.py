@@ -30,6 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import codegen
 from repro.core.ir import passes
 from repro.tune import cost
@@ -42,6 +43,48 @@ MODES = ("off", "cached", "full")
 
 # layout-tile candidates measured per graph (deduped against the caller's)
 _LAYOUT_CANDIDATES = ((128, 128), (32, 32))
+
+
+def measure(fn, *args, warmup: int = 1, iters: int = 3,
+            reduce: str = "median") -> float:
+    """On-device wall-clock of one compiled candidate: compile + ``warmup``
+    untimed calls, then ``reduce`` ("median" or "min") over ``iters``
+    synced calls. The shared timing harness of the tuner and the obs
+    per-op profiler. The tuner compares with the noise-tolerant median;
+    the profiler differences prefix times, where scheduler noise
+    accumulates through clamping — it wants the minimum, the best
+    estimate of the true kernel cost."""
+    for _ in range(1 + warmup):        # compile + warmup
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts) if reduce == "min" else np.median(ts))
+
+
+def measure_group(calls, warmup: int = 1, iters: int = 3) -> List[float]:
+    """Interleaved ``measure`` over a group of candidates whose timings
+    will be *compared or differenced*: ``calls`` is a list of
+    ``(fn, args_tuple)``. Every candidate is compiled + warmed first, then
+    the timed iterations round-robin across the whole group, so slow
+    clock drift (frequency scaling, co-tenant load) lands on every
+    candidate alike instead of biasing whichever ran last. Returns the
+    per-candidate minimum — the best estimate of true cost under
+    one-sided scheduler noise. The obs profiler differences consecutive
+    prefix times, where cross-candidate consistency matters more than any
+    single absolute number."""
+    for fn, args in calls:
+        for _ in range(1 + warmup):
+            jax.block_until_ready(fn(*args))
+    ts: List[List[float]] = [[] for _ in calls]
+    for _ in range(iters):
+        for rec, (fn, args) in zip(ts, calls):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            rec.append(time.perf_counter() - t0)
+    return [float(np.min(t)) for t in ts]
 
 
 class _KeyRecorder:
@@ -90,20 +133,20 @@ class Tuner:
             "measurements": 0, "cache_hits": 0, "tuned_ops": 0,
         }
 
+    def _bump(self, key: str, n: int = 1) -> None:
+        """Increment a tuner stat, mirrored into the obs metrics registry
+        (``tune_measurements`` / ``tune_cache_hits`` / ``tune_tuned_ops``)
+        so drivers and CI gates read one surface."""
+        self.stats[key] += n
+        obs.metrics().counter(f"tune_{key}").inc(n)
+
     # ------------------------------------------------------------------
     # measurement
     # ------------------------------------------------------------------
     def _time(self, fn, *args) -> float:
         """Median on-device wall-clock of one compiled candidate."""
-        self.stats["measurements"] += 1
-        for _ in range(1 + self.warmup):        # compile + warmup
-            jax.block_until_ready(fn(*args))
-        ts = []
-        for _ in range(self.iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
+        self._bump("measurements")
+        return measure(fn, *args, warmup=self.warmup, iters=self.iters)
 
     def _plan_time(self, plan, params, gt, kl, feats, backend,
                    decisions) -> float:
@@ -128,7 +171,7 @@ class Tuner:
                 continue                         # decided earlier this run
             cached = self.cache.get(key)
             if cached is not None:
-                self.stats["cache_hits"] += 1
+                self._bump("cache_hits")
                 self.decisions.set_op(key, S.variant_from_json(cached))
                 continue
             if self.mode != "full":
@@ -145,7 +188,7 @@ class Tuner:
                         best, best_t = c, t
             self.decisions.set_op(key, best)
             self.cache.put(key, best.to_json())
-            self.stats["tuned_ops"] += 1
+            self._bump("tuned_ops")
 
     # ------------------------------------------------------------------
     # full-graph stack tuning (layout tile -> materialization -> op variants)
@@ -221,7 +264,7 @@ class Tuner:
         key = f"lay|{gkey}|{backend}|{D.device_kind()}"
         cached = self.cache.get(key)
         if cached is not None:
-            self.stats["cache_hits"] += 1
+            self._bump("cache_hits")
             self.decisions.set_layout(key, cached["tile"],
                                       cached["node_block"])
             return cached["tile"], cached["node_block"]
@@ -256,7 +299,7 @@ class Tuner:
                f"{D.device_kind()}")
         cached = self.cache.get(key)
         if cached is not None and set(cached) == set(cands):
-            self.stats["cache_hits"] += 1
+            self._bump("cache_hits")
             self.decisions.set_materialization(key, cached)
             return frozenset(v for v, m in cached.items() if m == "compact")
         if self.mode != "full":
@@ -283,7 +326,7 @@ class Tuner:
                 current, base_t = flipped, t
         self.decisions.set_materialization(key, current)
         self.cache.put(key, current)
-        self.stats["tuned_ops"] += 1
+        self._bump("tuned_ops")
         return frozenset(v for v, m in current.items() if m == "compact")
 
     def _mat_time(self, prog, per_var, gt, kl, feats, backend, reorder,
