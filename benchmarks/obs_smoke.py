@@ -8,7 +8,8 @@ exports), then validates every artifact:
   (``repro.obs.schema.validate_trace``),
 * every registered phase span is present with nonzero duration
   (``sample`` / ``layout`` / ``execute`` for serving, ``sample`` /
-  ``layout`` / ``train_step`` for training),
+  ``layout`` / ``train_step`` for training, and ``sample_device`` /
+  ``layout_device`` when the device sampler is active),
 * the metrics snapshot conforms to the registry schema and carries the
   counters/histograms the CI gates read (executor traces, latency
   histograms).
@@ -42,6 +43,9 @@ TRAIN_CONFIG = dict(
 )
 SERVE_PHASES = ("sample", "layout", "execute")
 TRAIN_PHASES = ("sample", "layout", "train_step")
+# with --sampler device the host sample/layout phases are replaced by the
+# jit pipeline's spans — require those instead
+DEVICE_SERVE_PHASES = ("sample_device", "layout_device", "execute")
 
 
 def _quiet(*_a, **_k):
@@ -80,7 +84,8 @@ def run(out=print, workdir=None):
     workdir = workdir or tempfile.mkdtemp(prefix="repro-obs-smoke-")
     p = {k: os.path.join(workdir, f"{k}.json")
          for k in ("serve_trace", "serve_metrics",
-                   "train_trace", "train_metrics")}
+                   "train_trace", "train_metrics",
+                   "dserve_trace", "dserve_metrics")}
 
     s_stats = serve(trace_out=p["serve_trace"],
                     metrics_out=p["serve_metrics"], log=_quiet,
@@ -88,11 +93,20 @@ def run(out=print, workdir=None):
     t_stats = train(trace_out=p["train_trace"],
                     metrics_out=p["train_metrics"], log=_quiet,
                     **TRAIN_CONFIG)
+    d_stats = serve(trace_out=p["dserve_trace"],
+                    metrics_out=p["dserve_metrics"], log=_quiet,
+                    sampler="device", **SERVE_CONFIG)
 
     problems = _validate("serve", p["serve_trace"], p["serve_metrics"],
                          SERVE_PHASES)
     problems += _validate("train", p["train_trace"], p["train_metrics"],
                           TRAIN_PHASES)
+    problems += _validate("serve[device]", p["dserve_trace"],
+                          p["dserve_metrics"], DEVICE_SERVE_PHASES)
+    if d_stats["host_builds"] != 0:
+        problems.append(
+            f"serve[device]: {d_stats['host_builds']} batches fell back to "
+            f"the host sampling pipeline")
 
     # the counters/histograms the CI gates and drivers report from must
     # actually be populated, not merely schema-valid
@@ -115,6 +129,11 @@ def run(out=print, workdir=None):
     out(csv_row("obs_smoke/train", t_stats["step_ms_p50"] / 1e3,
                 f"p99_ms={t_stats['step_ms_p99']:.1f};"
                 f"phases={len(TRAIN_PHASES)};problems={len(problems)}"))
+    out(csv_row("obs_smoke/serve_device", d_stats["latency_ms_p50"] / 1e3,
+                f"p99_ms={d_stats['latency_ms_p99']:.1f};"
+                f"phases={len(DEVICE_SERVE_PHASES)};"
+                f"host_builds={d_stats['host_builds']};"
+                f"problems={len(problems)}"))
     return problems, s_stats, t_stats
 
 
@@ -127,7 +146,8 @@ def ci_check(workdir=None) -> None:
             print(f"[obs_smoke --ci] FAIL: {pb}", file=sys.stderr)
         raise SystemExit(1)
     print(f"[obs_smoke --ci] OK: serve phases {list(SERVE_PHASES)} + train "
-          f"phases {list(TRAIN_PHASES)} all present and nonzero; trace and "
+          f"phases {list(TRAIN_PHASES)} + device-sampler phases "
+          f"{list(DEVICE_SERVE_PHASES)} all present and nonzero; trace and "
           f"metrics JSON schema-valid; p50 {s_stats['latency_ms_p50']:.1f} "
           f"ms / p99 {s_stats['latency_ms_p99']:.1f} ms over "
           f"{s_stats['batches']} served batches")

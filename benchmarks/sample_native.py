@@ -1,0 +1,110 @@
+"""Device-native sampling gate: steady state with zero host pipeline work.
+
+Serves repeat traffic (the power-law assumption of the serving benchmarks)
+through both sampling pipelines and pins the device path's contract:
+
+* **zero host builds** — with ``--sampler device`` every non-cached batch is
+  built by the jit sampling + layout programs; the loader's ``host_builds``
+  counter (which increments on every host NumPy sample/layout pass) must
+  stay 0 for the whole run;
+* **zero sampler retraces after warmup** — the fixed-shape bucketing makes
+  every post-warmup batch replay already-traced programs
+  (``sampler_retraces_after_warmup == 0``);
+* **zero executor retraces after warmup** — device-built blocks land in the
+  same bucketed-shape set, so the compiled block executor also replays.
+
+``--ci`` turns any violation into a failing exit code.
+
+    PYTHONPATH=src python -m benchmarks.sample_native --ci
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from benchmarks.common import csv_row
+
+CONFIG = dict(
+    model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
+    classes=4, fanouts=[3, 3], batch_size=8, num_batches=9, tile=8,
+    node_block=8, repeat_after=3, seed=0,
+)
+
+
+def _quiet(*_a, **_k):
+    pass
+
+
+def run(out=print):
+    """Host + device serving over identical repeat traffic; returns
+    ``(problems, device_stats, host_stats)``."""
+    from repro.launch.serve_rgnn import serve
+
+    d = serve(sampler="device", log=_quiet, **CONFIG)
+    h = serve(sampler="host", log=_quiet, **CONFIG)
+
+    problems: List[str] = []
+    if d["host_builds"] != 0:
+        problems.append(
+            f"device serve ran {d['host_builds']} host pipeline builds "
+            f"(want 0)")
+    if d["device_builds"] <= 0:
+        problems.append("device serve built no batches on device")
+    if d.get("sampler_retraces_after_warmup", 0) != 0:
+        problems.append(
+            f"device sampler retraced "
+            f"{d['sampler_retraces_after_warmup']} times after warmup")
+    if d["retraces_after_warmup"] != 0:
+        problems.append(
+            f"block executor retraced {d['retraces_after_warmup']} times "
+            f"after warmup of the device stream")
+    # both pipelines must draw the same selection stream (shared
+    # counter-based keys): identical last-batch predictions
+    if d["last_preds"].tolist() != h["last_preds"].tolist():
+        problems.append("device and host pipelines predicted differently "
+                        "on the same seed stream")
+
+    out(csv_row("sample_native/device", d["latency_ms_p50"] / 1e3,
+                f"host_builds={d['host_builds']};"
+                f"device_builds={d['device_builds']};"
+                f"sampler_traces={d['sampler_traces']};"
+                f"sampler_retraces={d['sampler_retraces_after_warmup']};"
+                f"exec_retraces={d['retraces_after_warmup']};"
+                f"problems={len(problems)}"))
+    out(csv_row("sample_native/host", h["latency_ms_p50"] / 1e3,
+                f"host_builds={h['host_builds']};"
+                f"wait_ms={h['wait_ms_mean']:.1f}"))
+    return problems, d, h
+
+
+def ci_check() -> None:
+    """Exit 1 if the device steady state touches the host pipeline or
+    retraces."""
+    problems, d, _ = run(out=lambda *_: None)
+    if problems:
+        for pb in problems:
+            print(f"[sample_native --ci] FAIL: {pb}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[sample_native --ci] OK: {d['device_builds']} device-built "
+          f"batches, 0 host builds, {d['sampler_traces']} sampler traces "
+          f"(0 after warmup), 0 executor retraces; device p50 "
+          f"{d['latency_ms_p50']:.1f} ms")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="fail (exit 1) on any steady-state violation")
+    args = ap.parse_args(argv)
+    if args.ci:
+        ci_check()
+    else:
+        print("name,us_per_call,derived")
+        problems, _, _ = run()
+        for pb in problems:
+            print(f"[sample_native] problem: {pb}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

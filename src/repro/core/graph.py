@@ -133,6 +133,39 @@ class HeteroGraph:
         )
 
     # ------------------------------------------------------------------
+    def to_device_graph(self) -> "DeviceGraph":
+        """Upload the per-(dst, etype) CSC for device-native sampling.
+
+        The destination-sorted edge view is already (dst-major,
+        etype-minor) lexicographic — ``perm_dst`` is a stable sort of the
+        etype-sorted canonical edges — so the fine-grained CSC needs only a
+        bincount over ``dst * R + etype`` bins; ``csc_src`` *is*
+        ``src[perm_dst]``, and a candidate's position in it is exactly the
+        destination-sorted position the host sampler keys its counter-based
+        randomness on. Built once (host) and uploaded once at engine build.
+        """
+        n, r = self.num_nodes, self.num_etypes
+        if n * r >= 2**31:
+            raise ValueError(
+                f"device sampling needs num_nodes*num_etypes < 2^31 "
+                f"(got {n}*{r}); shard the graph first")
+        etype_d = self.etype[self.perm_dst]
+        bins = self.dst_sorted.astype(np.int64) * r + etype_d
+        counts = np.bincount(bins, minlength=n * r)
+        indptr = np.zeros(n * r + 1, dtype=np.int32)
+        np.cumsum(counts, out=indptr[1:])
+        return DeviceGraph(
+            csc_indptr=jnp.asarray(indptr),
+            csc_src=jnp.asarray(self.src[self.perm_dst]),
+            node_type=jnp.asarray(self.node_type),
+            ntype_ptr=jnp.asarray(self.ntype_ptr),
+            num_nodes=n,
+            num_ntypes=self.num_ntypes,
+            num_etypes=r,
+            max_bin=int(counts.max()) if counts.size else 0,
+        )
+
+    # ------------------------------------------------------------------
     def to_tensors(self) -> "GraphTensors":
         return GraphTensors(
             src=jnp.asarray(self.src),
@@ -184,6 +217,34 @@ class GraphTensors:
         return int(self.unique_src.shape[0])
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Device-resident full-graph CSC for on-device fanout sampling.
+
+    One (indptr, indices) pair at per-(destination, etype) granularity:
+    ``csc_indptr[v*R + r] : csc_indptr[v*R + r + 1]`` spans node ``v``'s
+    in-edges of type ``r`` inside ``csc_src`` (destination-sorted order, so
+    positions double as the sampler's randomness counters). The
+    presorted-by-ntype node invariant is preserved untouched — ``node_type``
+    / ``ntype_ptr`` ride along for block node-type slicing. ``max_bin`` (the
+    largest per-(dst, etype) in-degree) is the static candidate-window width
+    of the device sampling kernel.
+    """
+
+    csc_indptr: jnp.ndarray   # [N*R + 1] int32
+    csc_src: jnp.ndarray      # [E] int32 source node per dst-sorted edge
+    node_type: jnp.ndarray    # [N] int32, non-decreasing
+    ntype_ptr: jnp.ndarray    # [T+1] int32
+    num_nodes: int = dataclasses.field(metadata={"static": True})
+    num_ntypes: int = dataclasses.field(metadata={"static": True})
+    num_etypes: int = dataclasses.field(metadata={"static": True})
+    max_bin: int = dataclasses.field(metadata={"static": True})
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.csc_src.shape[0])
+
+
 # register GraphTensors as a pytree: arrays are leaves, counts are static aux
 import jax.tree_util as _tree_util  # noqa: E402
 
@@ -208,6 +269,18 @@ def _gt_unflatten(aux, children):
 
 
 _tree_util.register_pytree_node(GraphTensors, _gt_flatten, _gt_unflatten)
+
+
+_DG_ARRAY_FIELDS = ["csc_indptr", "csc_src", "node_type", "ntype_ptr"]
+_DG_STATIC_FIELDS = ["num_nodes", "num_ntypes", "num_etypes", "max_bin"]
+
+_tree_util.register_pytree_node(
+    DeviceGraph,
+    lambda dg: (tuple(getattr(dg, f) for f in _DG_ARRAY_FIELDS),
+                tuple(getattr(dg, f) for f in _DG_STATIC_FIELDS)),
+    lambda aux, ch: DeviceGraph(**dict(zip(_DG_ARRAY_FIELDS, ch)),
+                                **dict(zip(_DG_STATIC_FIELDS, aux))),
+)
 
 
 # ----------------------------------------------------------------------

@@ -144,6 +144,7 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
     bucket: bool = True,
     activation: str = "relu",
     seed: int = 0,
+    sampler: str = "host",
     tune: str = "off",
     tune_cache: Optional[str] = None,
     tune_full_graph: bool = True,
@@ -197,6 +198,6 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
             model=prog_fn, layers=layers, dim=dim, hidden=hidden,
             classes=classes, fanouts=sample, backend=backend, tile=tile,
             node_block=node_block, bucket=bucket, activation=activation,
-            seed=seed, tune=tune, tune_cache=tune_cache,
+            seed=seed, sampler=sampler, tune=tune, tune_cache=tune_cache,
             tune_full_graph=tune_full_graph)
     return CompiledRGNN(RGNNEngine(graph, cfg, log=log), opt=opt)

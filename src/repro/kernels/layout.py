@@ -17,12 +17,20 @@ adaptation moves irregularity to **block granularity**:
 
 Both are computed once per graph on the host (NumPy) and are *data layout
 choices* in the sense of §3.2.2 — the inter-op IR never sees them.
+
+The ``device_*`` functions at the bottom are the jit-traceable (jax.numpy)
+equivalents of ``pad_segments`` / ``compose_gather_rows`` / ``block_csr``
+used by the device-native sampling path (``kernels/sampling_ops.py``): same
+layout semantics, but the padded row/edge capacity is a *static* argument
+(chosen from bucket-rounded counts) so the whole layout build stays inside
+one compiled sampling program with fixed shapes.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -211,3 +219,100 @@ def block_csr(dst_ptr: np.ndarray, edge_tile: int, node_block: int) -> BlockedCS
         padded_edges=ep, edge_map=edge_map, local_dst=local_dst,
         tile_to_block=t2b, num_node_blocks=nb,
     )
+
+
+# ---------------------------------------------------------------------------
+# device-side (jit-traceable) layout builders
+# ---------------------------------------------------------------------------
+def _device_tile_runs(pstart: jnp.ndarray, tile: int, num_tiles: int,
+                      num_groups: int) -> jnp.ndarray:
+    """tile -> group map from tile-aligned padded group starts [G+1].
+
+    Tiles past the populated prefix extend the **last** group's run (the
+    ``pad_segments_rows`` growth rule: accumulating kernels need the map
+    non-decreasing, and trailing pad tiles must not open a new group).
+    """
+    boundaries = pstart[1:] // tile                       # [G] end tile of g
+    t = jnp.arange(num_tiles, dtype=jnp.int32)
+    t2g = jnp.searchsorted(boundaries, t, side="right")
+    return jnp.clip(t2g, 0, num_groups - 1).astype(jnp.int32)
+
+
+def device_pad_segments(seg_ptr: jnp.ndarray, group_of_row: jnp.ndarray,
+                        tile: int, padded_rows: int):
+    """jnp ``pad_segments`` (+ ``pad_segments_rows`` growth), fixed shapes.
+
+    ``seg_ptr`` [G+1] are the group offsets over ``M = len(group_of_row)``
+    type-sorted rows (every row's group in ``group_of_row``, non-decreasing).
+    ``padded_rows`` is the static row capacity and must satisfy
+    ``padded_rows >= M + G*tile > M + sum_g (tile-1)`` — i.e. large enough
+    for the worst-case per-group tile padding — and be a tile multiple.
+    Returns ``(row_map [padded_rows], inv_map [M], t2g [padded_rows//tile])``
+    with exactly the host semantics: pad slots are -1 in ``row_map`` and
+    trailing tiles extend the last group's run.
+    """
+    if padded_rows % tile:
+        raise ValueError("padded_rows must be a tile multiple")
+    num_groups = int(seg_ptr.shape[0]) - 1
+    m = int(group_of_row.shape[0])
+    if padded_rows < m + num_groups * tile:
+        raise ValueError(
+            f"padded_rows={padded_rows} cannot hold {m} rows with "
+            f"{num_groups} groups of up-to-(tile-1) padding each")
+    sizes = seg_ptr[1:] - seg_ptr[:-1]
+    padded = ((sizes + tile - 1) // tile) * tile
+    pstart = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(padded).astype(jnp.int32)])
+    rows = jnp.arange(m, dtype=jnp.int32)
+    inv_map = (pstart[group_of_row] + (rows - seg_ptr[group_of_row])
+               ).astype(jnp.int32)
+    row_map = jnp.full(padded_rows, -1, jnp.int32).at[inv_map].set(
+        rows, mode="drop")
+    t2g = _device_tile_runs(pstart, tile, padded_rows // tile, num_groups)
+    return row_map, inv_map, t2g
+
+
+def device_compose_gather_rows(row_map: jnp.ndarray,
+                               idx: jnp.ndarray) -> jnp.ndarray:
+    """jnp ``compose_gather_rows``: padded slot -> source row (or -1)."""
+    return jnp.where(row_map >= 0, idx[jnp.maximum(row_map, 0)],
+                     -1).astype(jnp.int32)
+
+
+def device_block_csr(dst_ptr: jnp.ndarray, dst_sorted: jnp.ndarray,
+                     edge_tile: int, node_block: int, padded_edges: int):
+    """jnp ``block_csr``, fixed shapes.
+
+    ``dst_ptr`` [N+1] / ``dst_sorted`` [E] describe the destination-sorted
+    edges (N, E static). ``padded_edges`` is the static slot capacity and
+    must satisfy ``padded_edges >= E + num_node_blocks*edge_tile`` (worst
+    case per-block tile padding) and be a tile multiple. Returns
+    ``(edge_map_d [padded_edges], local_dst [padded_edges], t2b)`` where
+    ``edge_map_d`` holds **dst-sorted** edge indices (compose with
+    ``perm_dst`` for canonical order, as ``ops.blocked_csr_dev`` does), pads
+    are -1 / ``node_block``, and trailing tiles extend the last block's run.
+    """
+    if padded_edges % edge_tile:
+        raise ValueError("padded_edges must be an edge_tile multiple")
+    num_nodes = int(dst_ptr.shape[0]) - 1
+    e = int(dst_sorted.shape[0])
+    nb = (num_nodes + node_block - 1) // node_block
+    if padded_edges < e + nb * edge_tile:
+        raise ValueError(
+            f"padded_edges={padded_edges} cannot hold {e} edges over "
+            f"{nb} node blocks")
+    bidx = jnp.minimum(jnp.arange(nb + 1, dtype=jnp.int32) * node_block,
+                       num_nodes)
+    bptr = dst_ptr[bidx]                                   # [nb+1]
+    sizes = bptr[1:] - bptr[:-1]
+    padded = ((sizes + edge_tile - 1) // edge_tile) * edge_tile
+    pstart = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(padded).astype(jnp.int32)])
+    b_of = (dst_sorted // node_block).astype(jnp.int32)    # [E]
+    slot = pstart[b_of] + (jnp.arange(e, dtype=jnp.int32) - bptr[b_of])
+    edge_map_d = jnp.full(padded_edges, -1, jnp.int32).at[slot].set(
+        jnp.arange(e, dtype=jnp.int32), mode="drop")
+    local_dst = jnp.full(padded_edges, node_block, jnp.int32).at[slot].set(
+        (dst_sorted - b_of * node_block).astype(jnp.int32), mode="drop")
+    t2b = _device_tile_runs(pstart, edge_tile, padded_edges // edge_tile, nb)
+    return edge_map_d, local_dst, t2b

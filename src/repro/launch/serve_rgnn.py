@@ -51,6 +51,7 @@ def serve(
     node_block: int = 32,
     bucket: bool = True,
     seed: int = 0,
+    sampler: str = "host",
     prefetch_depth: int = 2,
     cache_blocks: int = 0,
     cache_layouts: int = 0,
@@ -96,17 +97,17 @@ def serve(
         return _serve_scoped(
             sc, model, dataset, scale, layers, dim, hidden, classes,
             fanouts, batch_size, num_batches, backend, tile, node_block,
-            bucket, seed, prefetch_depth, cache_blocks, cache_layouts,
-            repeat_after, compiled, warmup_batches, tune, tune_cache,
-            trace_out, metrics_out, profile, log)
+            bucket, seed, sampler, prefetch_depth, cache_blocks,
+            cache_layouts, repeat_after, compiled, warmup_batches, tune,
+            tune_cache, trace_out, metrics_out, profile, log)
 
 
 def _serve_scoped(
     sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
     batch_size, num_batches, backend, tile, node_block, bucket, seed,
-    prefetch_depth, cache_blocks, cache_layouts, repeat_after, compiled,
-    warmup_batches, tune, tune_cache, trace_out, metrics_out, profile,
-    log,
+    sampler, prefetch_depth, cache_blocks, cache_layouts, repeat_after,
+    compiled, warmup_batches, tune, tune_cache, trace_out, metrics_out,
+    profile, log,
 ):
 
     t0 = time.perf_counter()
@@ -120,13 +121,13 @@ def _serve_scoped(
     engine = hector.compile(
         model, graph, layers=layers, dim=dim, hidden=hidden,
         classes=classes, sample=fanouts, backend=backend, tile=tile,
-        node_block=node_block, bucket=bucket, seed=seed, tune=tune,
-        tune_cache=tune_cache, tune_full_graph=False, log=log)
+        node_block=node_block, bucket=bucket, seed=seed, sampler=sampler,
+        tune=tune, tune_cache=tune_cache, tune_full_graph=False, log=log)
     fanouts = engine.cfg.fanouts
     log(f"[serve_rgnn] {model} on {dataset} (scale {scale}): "
         f"{graph.num_nodes} nodes, {graph.num_edges} edges, "
         f"{graph.num_etypes} etypes; fanouts={fanouts} "
-        f"(graph build {t_graph:.2f}s)")
+        f"sampler={sampler} (graph build {t_graph:.2f}s)")
     params = engine.init(jax.random.key(seed))
 
     if tune != "off":
@@ -162,6 +163,8 @@ def _serve_scoped(
     edges_seen = 0
     retraces_after_warmup = 0
     traces_at_warmup = None
+    dev_sampler = getattr(engine, "device_sampler", None)
+    sampler_traces_at_warmup = None
     last_mb = None
     t_serve0 = time.perf_counter()
     try:
@@ -175,6 +178,8 @@ def _serve_scoped(
             t_wait = time.perf_counter() - t0
             if len(lat) == warmup_batches:
                 traces_at_warmup = executor.trace_count
+                if dev_sampler is not None:
+                    sampler_traces_at_warmup = dev_sampler.trace_count
             t0 = time.perf_counter()
             # engine.apply_blocks opens the "execute" span (with a device
             # sync inside it when tracing is on)
@@ -221,7 +226,20 @@ def _serve_scoped(
         "executor_cache_hits": executor.cache_hits,
         "executor_compiled": executor.num_compiled,
         "retraces_after_warmup": retraces_after_warmup,
+        "sampler": loader.mode,
+        "host_builds": loader.host_builds,
+        "device_builds": loader.device_builds,
     }
+    if dev_sampler is not None:
+        stats["sampler_traces"] = dev_sampler.trace_count
+        stats["sampler_retraces_after_warmup"] = (
+            dev_sampler.trace_count - sampler_traces_at_warmup
+            if sampler_traces_at_warmup is not None else 0)
+        log(f"[serve_rgnn] device sampler: {dev_sampler.trace_count} traces "
+            f"/ {dev_sampler.cache_hits} program-cache hits "
+            f"({stats['sampler_retraces_after_warmup']} retraces after "
+            f"warmup); builds host {loader.host_builds} / device "
+            f"{loader.device_builds}")
     if obs.metrics_enabled():
         # registry-sourced latency percentiles (the reservoir keeps every
         # sample at this scale, so these match the array-side numbers)
@@ -297,6 +315,11 @@ def main(argv=None):
     ap.add_argument("--no-bucket", action="store_true",
                     help="disable power-of-two shape bucketing (each batch "
                          "then compiles fresh shapes)")
+    ap.add_argument("--sampler", default="host", choices=["host", "device"],
+                    help="'host': NumPy fanout sampling + host layout "
+                         "build; 'device': jit-compiled sampling + layout "
+                         "over a device-resident CSC (equivalent block "
+                         "streams under one seed)")
     ap.add_argument("--cache-blocks", type=int, default=0,
                     help="LRU capacity of the sampled-block cache keyed by "
                          "(seeds, fanout); 0 disables")
@@ -349,7 +372,7 @@ def main(argv=None):
         fanouts=parse_fanout(args.fanout, args.layers),
         batch_size=args.batch_size, num_batches=args.num_batches,
         backend=args.backend, tile=args.tile, node_block=args.node_block,
-        bucket=not args.no_bucket, seed=args.seed,
+        bucket=not args.no_bucket, seed=args.seed, sampler=args.sampler,
         cache_blocks=args.cache_blocks, cache_layouts=args.cache_layouts,
         repeat_after=args.repeat_after or None, compiled=not args.eager,
         tune=args.tune, tune_cache=args.tune_cache,

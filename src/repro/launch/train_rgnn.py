@@ -88,6 +88,7 @@ def train(
     node_block: int = 32,
     bucket: bool = True,
     seed: int = 0,
+    sampler: str = "host",
     val_frac: float = 0.2,
     ckpt_dir=None,
     ckpt_every: int = 0,
@@ -125,27 +126,30 @@ def train(
         return _train_scoped(
             sc, model, dataset, scale, layers, dim, hidden, classes,
             fanouts, batch_size, epochs, lr, weight_decay, warmup_steps,
-            backend, tile, node_block, bucket, seed, val_frac, ckpt_dir,
-            ckpt_every, resume, eval_every_epochs, parity, parity_tol,
-            tune, tune_cache, trace_out, metrics_out, profile, log)
+            backend, tile, node_block, bucket, seed, sampler, val_frac,
+            ckpt_dir, ckpt_every, resume, eval_every_epochs, parity,
+            parity_tol, tune, tune_cache, trace_out, metrics_out, profile,
+            log)
 
 
 def _train_scoped(
     sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
     batch_size, epochs, lr, weight_decay, warmup_steps, backend, tile,
-    node_block, bucket, seed, val_frac, ckpt_dir, ckpt_every, resume,
-    eval_every_epochs, parity, parity_tol, tune, tune_cache, trace_out,
-    metrics_out, profile, log,
+    node_block, bucket, seed, sampler, val_frac, ckpt_dir, ckpt_every,
+    resume, eval_every_epochs, parity, parity_tol, tune, tune_cache,
+    trace_out, metrics_out, profile, log,
 ):
     cfg = EngineConfig(model=model, layers=layers, dim=dim, hidden=hidden,
                        classes=classes, fanouts=fanouts, backend=backend,
                        tile=tile, node_block=node_block, bucket=bucket,
-                       seed=seed, tune=tune, tune_cache=tune_cache)
+                       seed=seed, sampler=sampler, tune=tune,
+                       tune_cache=tune_cache)
     engine, feats, labels, train_ids, val_ids = build_task(
         dataset, scale, cfg, seed, val_frac)
     log(f"[train_rgnn] {model} on {dataset} (scale {scale}): "
         f"{engine.graph.num_nodes} nodes, {engine.graph.num_edges} edges, "
         f"{engine.graph.num_etypes} etypes; fanouts={cfg.fanouts}, "
+        f"sampler={sampler}, "
         f"{len(train_ids)} train / {len(val_ids)} val nodes")
 
     # size the LR schedule off the same stream the trainer will iterate:
@@ -190,6 +194,14 @@ def _train_scoped(
 
     for k, v in engine.tuner_stats.items():
         stats[f"tune_{k}"] = v
+    dev_sampler = getattr(engine, "device_sampler", None)
+    if dev_sampler is not None:
+        for k, v in dev_sampler.stats().items():
+            stats[f"sampler_{k}"] = v
+        log(f"[train_rgnn] device sampler: "
+            f"{dev_sampler.trace_count} traces / "
+            f"{dev_sampler.cache_hits} program-cache hits over "
+            f"{dev_sampler.batches_sampled} batches")
     final_train = trainer.full.evaluate(state.params)
     final_val = (trainer.full.evaluate(state.params, val_ids)
                  if len(val_ids) else None)
@@ -300,6 +312,10 @@ def main(argv=None):
     ap.add_argument("--tile", type=int, default=32)
     ap.add_argument("--node-block", type=int, default=32)
     ap.add_argument("--no-bucket", action="store_true")
+    ap.add_argument("--sampler", default="host", choices=["host", "device"],
+                    help="'host': NumPy fanout sampling + host layout "
+                         "build; 'device': jit-compiled sampling + layout "
+                         "over a device-resident CSC")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--val-frac", type=float, default=0.2)
     ap.add_argument("--ckpt-dir", default=None)
@@ -350,7 +366,8 @@ def main(argv=None):
         batch_size=args.batch_size, epochs=args.epochs, lr=args.lr,
         weight_decay=args.weight_decay, backend=args.backend,
         tile=args.tile, node_block=args.node_block,
-        bucket=not args.no_bucket, seed=args.seed, val_frac=args.val_frac,
+        bucket=not args.no_bucket, seed=args.seed, sampler=args.sampler,
+        val_frac=args.val_frac,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume, eval_every_epochs=args.eval_every_epochs,
         parity=args.parity, parity_tol=args.parity_tol,

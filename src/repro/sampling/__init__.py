@@ -6,11 +6,23 @@ system: the same lowered IR plans and Pallas/XLA kernels run unchanged on
 each sampled block, because every block *is* a ``HeteroGraph`` with the
 full per-graph preprocessing (etype-sorted edges, dst CSR, compact
 materialization map) recomputed on the sampled subgraph.
+
+Two interchangeable sampling pipelines share one determinism contract
+(counter-based per-edge keys; see ``sampler.edge_sample_keys``):
+
+* ``FanoutSampler`` — host NumPy sampling + ``build_minibatch`` layouts;
+* ``DeviceSampler`` — the same selection and layout build as jit-compiled
+  device programs over a device-resident CSC (``device_sampler``).
 """
 from repro.sampling.sampler import (  # noqa: F401
     Block,
     BlockSequence,
     FanoutSampler,
+)
+from repro.sampling.device_sampler import (  # noqa: F401
+    DeviceBlock,
+    DeviceBlockSequence,
+    DeviceSampler,
 )
 from repro.sampling.loader import (  # noqa: F401
     EpochSeedStream,

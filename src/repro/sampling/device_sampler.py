@@ -1,0 +1,238 @@
+"""Device-native fanout sampler: sample -> layout -> execute without host
+NumPy in the steady-state loop.
+
+``DeviceSampler`` reproduces ``FanoutSampler``'s exact selection — both rank
+candidate in-edges by the shared counter-based keys of
+``sampler.edge_sample_keys`` over the shared destination-sorted candidate
+positions, keyed by the same ``hop_base_key(seed, batch_index, hop, epoch)``
+— but evaluates it as jit-compiled programs over a device-resident CSC
+(``HeteroGraph.to_device_graph``), and builds each block's ``GraphTensors``
+*and* ``KernelLayouts`` on device (``kernels/sampling_ops.py``). The
+``MiniBatch`` it emits is a drop-in for the host loader's: same pytree
+types, same hop chaining, same seed-order restoration.
+
+Shape discipline (the retrace-freeness contract): every per-hop program is
+compiled for a static (frontier bucket, fanout, count-bucket) tuple. Stage A
+(selection) is shaped by the frontier bucket alone; the host reads back one
+3-vector of counts per hop — the only device->host sync — and rounds them to
+power-of-two buckets that select the stage-B (compaction + layout) program.
+Recurring traffic recurs over a small bucket set, so after warmup every
+batch replays already-traced programs; ``trace_count`` / ``cache_hits`` /
+``cache_misses`` expose that for the ``sample_native`` CI gate.
+
+Prefetch overlap needs no thread: both stages are async-dispatched JAX
+computations, so the loader simply dispatches batch k+1's sampling before
+the consumer executes batch k — the two pipelines interleave as separate
+streams of enqueued device work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.core.graph import HeteroGraph
+from repro.kernels import sampling_ops as SO
+from repro.kernels.layout import pow2ceil
+from repro.sampling.sampler import (FanoutSpec, hop_base_key,
+                                    normalize_fanout)
+
+
+@dataclasses.dataclass
+class DeviceBlock:
+    """Metadata summary of one device-sampled hop (execution order)."""
+
+    num_src: int      # real (unpadded) nodes in the block
+    num_edges: int    # real sampled edges
+    num_dst: int      # real output-frontier nodes
+    node_ids: jnp.ndarray   # [n_pad] sorted global ids, sentinel N pads
+
+
+@dataclasses.dataclass
+class DeviceBlockSequence:
+    """Device-path stand-in for ``sampler.BlockSequence``: carries the seed
+    bookkeeping the consumers need (label slicing, per-hop summaries) without
+    materializing host ``Block``/``HeteroGraph`` objects."""
+
+    blocks: List[DeviceBlock]
+    seeds: np.ndarray       # requested seed IDs, order and dupes preserved
+    num_nodes: int          # full-graph N (the pad sentinel)
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.blocks)
+
+    def slice_labels(self, labels: np.ndarray) -> np.ndarray:
+        """Labels aligned with the block forward's output (one row per
+        requested seed, in request order) — same contract as the host."""
+        return np.asarray(labels)[self.seeds]
+
+    def describe(self) -> str:
+        lines = [f"DeviceBlockSequence(seeds={len(self.seeds)})"]
+        for i, b in enumerate(self.blocks):
+            lines.append(f"  hop {i}: {b.num_src} nodes -> {b.num_dst} dst, "
+                         f"{b.num_edges} edges (device)")
+        return "\n".join(lines)
+
+
+class DeviceSampler:
+    """Jit-compiled fanout sampling + layout build over a device CSC.
+
+    ``sample_minibatch`` is the whole device pipeline for one batch; the
+    loader's ``backend="device"`` path calls it instead of
+    ``FanoutSampler.sample`` + ``build_minibatch``.
+    """
+
+    def __init__(self, hg: HeteroGraph, fanouts: Sequence[FanoutSpec],
+                 seed: int = 0, *, tile: int = 32, node_block: int = 32,
+                 backend: str = "xla"):
+        if not fanouts:
+            raise ValueError("need at least one hop fanout")
+        if tile & (tile - 1):
+            raise ValueError("device sampling needs a power-of-two tile")
+        if hg.num_edges == 0:
+            raise ValueError("device sampling needs a graph with edges")
+        self.hg = hg
+        self.dg = hg.to_device_graph()
+        self.fanouts = [normalize_fanout(f, hg.num_etypes) for f in fanouts]
+        self.seed = seed
+        self.tile = tile
+        self.node_block = node_block
+        # keys are Pallas-kernel-generated off the XLA backends' default;
+        # selection/compaction are XLA sorts either way
+        self.key_backend = "xla" if backend == "xla" else "pallas_interpret" \
+            if backend == "pallas_interpret" else "pallas"
+        self._k_eff = [SO.effective_fanouts(f, self.dg.max_bin)
+                       for f in self.fanouts]
+        self._jit = {}
+        self.trace_count = 0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.batches_sampled = 0
+
+    @property
+    def num_hops(self) -> int:
+        return len(self.fanouts)
+
+    # ------------------------------------------------------------------
+    def _compiled(self, key, factory):
+        """Explicit jit cache keyed by the static bucket tuple, with trace
+        counting *inside* the traced function (the executor idiom): a cache
+        hit that somehow retraced would still be counted."""
+        fn = self._jit.get(key)
+        if fn is None:
+            self.cache_misses += 1
+            inner = factory()
+
+            def counted(*args, _inner=inner):
+                self.trace_count += 1
+                obs.metrics().counter("sampler_traces").inc()
+                return _inner(*args)
+
+            fn = jax.jit(counted)
+            self._jit[key] = fn
+        else:
+            self.cache_hits += 1
+        return fn
+
+    def _bucket(self, count: int) -> int:
+        return max(self.tile, pow2ceil(count + 1))
+
+    # ------------------------------------------------------------------
+    def sample_minibatch(self, seeds: np.ndarray, batch_index: int = 0,
+                         epoch: Optional[int] = None, step: int = 0):
+        """Sample + build one device-resident ``MiniBatch``.
+
+        Randomness is keyed identically to the host sampler —
+        ``hop_base_key(seed, batch_index, hop, epoch)`` — so the two paths
+        select the same edge multisets for the same stream position.
+        """
+        from repro.sampling.loader import MiniBatch  # local: avoid cycle
+
+        seeds = np.asarray(seeds, dtype=np.int32)
+        if seeds.ndim != 1 or seeds.size == 0:
+            raise ValueError("seeds must be a non-empty 1-D int array")
+        if seeds.min() < 0 or seeds.max() >= self.hg.num_nodes:
+            raise ValueError("seed node id out of range")
+        dg = self.dg
+        nhops = self.num_hops
+        b = int(seeds.shape[0])
+        f0 = pow2ceil(b)
+
+        prep = self._compiled(
+            ("prep", b, f0),
+            lambda: SO.make_prep_seeds(dg.num_nodes, f0))
+        frontier, seed_perm = prep(jnp.asarray(seeds))
+
+        hops = []         # sampling order (outermost first)
+        num_dst = [None] * nhops
+        prev_real = None  # real node count of the previous hop's union
+        for hop in range(nhops):
+            k_eff = self._k_eff[nhops - 1 - hop]
+            kmax = max(1, max(k_eff))
+            fp = int(frontier.shape[0])
+            base = jnp.asarray(
+                hop_base_key(self.seed, int(batch_index), hop, epoch))
+            with obs.span("sample_device", step=step, hop=hop):
+                fn_a = self._compiled(
+                    ("A", fp, k_eff, self.key_backend),
+                    lambda k_eff=k_eff, fp=fp: SO.make_sample_hop(
+                        dg, k_eff, fp, self.key_backend))
+                union, sel_src, sel_valid, counts = fn_a(
+                    dg.csc_indptr, dg.csc_src, frontier, base)
+                # the loop's only device->host sync: three ints that pick
+                # the next static bucket (integer rounding, not layout work)
+                n_next, e_cnt, u_cnt = (int(x) for x in np.asarray(counts))
+            n_pad = self._bucket(n_next)
+            e_pad = self._bucket(e_cnt)
+            u_pad = self._bucket(u_cnt)
+            with obs.span("layout_device", step=step, hop=hop):
+                fn_b = self._compiled(
+                    ("B", fp, kmax, n_pad, e_pad, u_pad),
+                    lambda fp=fp, kmax=kmax, n_pad=n_pad, e_pad=e_pad,
+                    u_pad=u_pad: SO.make_build_block(
+                        dg, fp, kmax, n_pad, e_pad, u_pad,
+                        self.tile, self.node_block))
+                gt, kl, node_ids, dst_local, input_gather = fn_b(
+                    union, sel_src, sel_valid, frontier, dg.node_type)
+            hops.append(dict(gt=gt, kl=kl, node_ids=node_ids,
+                             dst_local=dst_local, input_gather=input_gather,
+                             num_src=n_next, num_edges=e_cnt))
+            num_dst[hop] = prev_real if prev_real is not None else None
+            prev_real = n_next
+            frontier = node_ids
+
+        # execution order: innermost (last sampled) hop first
+        hops.reverse()
+        num_dst.reverse()
+        blocks = [DeviceBlock(num_src=h["num_src"], num_edges=h["num_edges"],
+                              num_dst=(d if d is not None
+                                       else int(np.unique(seeds).size)),
+                              node_ids=h["node_ids"])
+                  for h, d in zip(hops, num_dst)]
+        seq = DeviceBlockSequence(blocks=blocks, seeds=seeds,
+                                  num_nodes=self.hg.num_nodes)
+        self.batches_sampled += 1
+        return MiniBatch(
+            step=step,
+            seq=seq,
+            tensors=[h["gt"] for h in hops],
+            layouts=[h["kl"] for h in hops],
+            input_ids=hops[0]["input_gather"],
+            dst_locals=[h["dst_local"] for h in hops],
+            seed_perm=seed_perm,
+        )
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "batches_sampled": self.batches_sampled,
+            "trace_count": self.trace_count,
+            "jit_cache_hits": self.cache_hits,
+            "jit_cache_misses": self.cache_misses,
+            "compiled_programs": len(self._jit),
+        }

@@ -19,6 +19,16 @@ pipeline (ROADMAP "cached neighbor layouts"):
 
 Hit/miss counters are exposed (``cache_stats``) so the serving driver and
 benchmarks can report and assert steady-state reuse.
+
+**Device mode**: constructed with a ``DeviceSampler`` (anything exposing
+``sample_minibatch``) instead of a ``FanoutSampler``, the loader switches to
+a threadless prefetch: sampling and layout construction are jit-compiled
+device programs whose dispatch is asynchronous, so overlapping batch k+1's
+sampling with batch k's execution only requires *dispatching* k+1 before the
+consumer executes k — two interleaved streams of enqueued device work, no
+producer thread. ``host_builds`` / ``device_builds`` count which pipeline
+actually built each non-cached batch, so benchmarks can assert the device
+steady state performs zero host-side sampling or layout work.
 """
 from __future__ import annotations
 
@@ -317,10 +327,23 @@ class MiniBatchLoader:
             if cache_layouts else None
         self._fanout_key = tuple(
             tuple(int(x) for x in f) for f in sampler.fanouts)
-        self.q: queue.Queue = queue.Queue(maxsize=depth)
-        self._done = False
-        self._stop = threading.Event()
+        # a DeviceSampler builds whole MiniBatches on device; everything else
+        # goes through the host sample + build_minibatch pipeline
+        self.mode = ("device" if hasattr(sampler, "sample_minibatch")
+                     else "host")
+        self.host_builds = 0     # batches built by the host NumPy pipeline
+        self.device_builds = 0   # batches built by jit device programs
         self._start_step = start_step
+        self._done = False
+        if self.mode == "device":
+            # threadless prefetch: a deque of already-dispatched batches
+            self._depth = max(1, depth)
+            self._next_step = start_step
+            self._pending: collections.deque = collections.deque()
+            self._thread = None
+            return
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
         self._thread = threading.Thread(target=self._fill, daemon=True)
         self._thread.start()
 
@@ -333,16 +356,26 @@ class MiniBatchLoader:
             out["layout_cache"] = self.layout_cache.stats()
         return out
 
+    def build_stats(self) -> dict:
+        """Which pipeline built the non-cached batches (the ``sample_native``
+        CI gate asserts ``host_builds == 0`` in device mode)."""
+        return {"mode": self.mode, "host_builds": self.host_builds,
+                "device_builds": self.device_builds}
+
+    def _cache_key(self, seeds: np.ndarray, epoch) -> tuple:
+        return (seeds.tobytes(), self._fanout_key, self.tile,
+                self.node_block, self.bucket, epoch)
+
     def _build(self, step: int) -> MiniBatch:
         seeds = self._seeds_for(step)
         epoch = self._epoch_of(step) if self._epoch_of is not None else None
         key = None
         if self.block_cache is not None:
-            key = (seeds.tobytes(), self._fanout_key, self.tile,
-                   self.node_block, self.bucket, epoch)
+            key = self._cache_key(seeds, epoch)
             mb = self.block_cache.get(key)
             if mb is not None:
                 return dataclasses.replace(mb, step=step)
+        self.host_builds += 1
         with obs.span("sample", step=step):
             seq = self.sampler.sample(seeds, batch_index=step, epoch=epoch)
         with obs.span("layout", step=step):
@@ -353,6 +386,33 @@ class MiniBatchLoader:
         if self.block_cache is not None:
             self.block_cache.put(key, mb)
         return mb
+
+    def _build_device(self, step: int) -> MiniBatch:
+        seeds = self._seeds_for(step)
+        epoch = self._epoch_of(step) if self._epoch_of is not None else None
+        key = None
+        if self.block_cache is not None:
+            key = self._cache_key(seeds, epoch)
+            mb = self.block_cache.get(key)
+            if mb is not None:
+                return dataclasses.replace(mb, step=step)
+        self.device_builds += 1
+        mb = self.sampler.sample_minibatch(seeds, batch_index=step,
+                                           epoch=epoch, step=step)
+        if self.block_cache is not None:
+            self.block_cache.put(key, mb)
+        return mb
+
+    def _pump(self) -> None:
+        """Dispatch device builds until the prefetch window is full: JAX
+        execution is asynchronous, so each build enqueues device work and
+        returns — batch k+1 samples while the consumer executes batch k."""
+        while len(self._pending) < self._depth:
+            if (self.num_batches is not None and
+                    self._next_step - self._start_step >= self.num_batches):
+                return
+            self._pending.append(self._build_device(self._next_step))
+            self._next_step += 1
 
     def _fill(self):
         step = self._start_step
@@ -382,6 +442,14 @@ class MiniBatchLoader:
     def __next__(self) -> MiniBatch:
         if self._done:
             raise StopIteration
+        if self.mode == "device":
+            self._pump()
+            if not self._pending:
+                self._done = True
+                raise StopIteration
+            mb = self._pending.popleft()
+            self._pump()   # dispatch the next batch before the caller executes
+            return mb
         item = self.q.get()
         if item is self._SENTINEL:
             self._done = True
@@ -393,6 +461,10 @@ class MiniBatchLoader:
         return item
 
     def close(self):
+        if self.mode == "device":
+            self._done = True
+            self._pending.clear()
+            return
         self._stop.set()
         # drain so a blocked producer can observe the stop flag
         try:

@@ -19,10 +19,19 @@ frontier ordering matches the next block's node ordering by construction.
 Sampling is seeded per (sampler seed, batch index) — the same determinism
 contract as ``data/pipeline.py`` — so restarts and replicas replay the
 exact same mini-batch stream.
+
+The per-candidate randomness is a **counter-based stateless hash** over the
+candidate edge's destination-sorted position (``mix32`` of position XOR a
+per-(seed, epoch, batch, hop) base key), not a stateful generator: the host
+sampler and ``sampling/device_sampler.py`` evaluate the identical function
+over the identical positions, so both select the same edges — the
+host/device parity contract, and the reason sampling carries no per-host
+nondeterminism.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
@@ -34,12 +43,76 @@ FanoutSpec = Union[int, Dict[int, int], Sequence[int], np.ndarray]
 FULL_NEIGHBORHOOD = -1  # fanout value meaning "keep every in-edge"
 
 
+# ---------------------------------------------------------------------------
+# counter-based randomness (shared host/device)
+# ---------------------------------------------------------------------------
+_MIX_M1 = np.uint32(0x85EBCA6B)
+_MIX_M2 = np.uint32(0xC2B2AE35)
+
+
+def mix32(x):
+    """murmur3 finalizer over uint32 values; elementwise, wraparound.
+
+    Works unchanged on NumPy and jax.numpy uint32 arrays (the constants are
+    ``np.uint32`` scalars, which both array types combine without upcasting),
+    so host and device samplers share one key function.
+    """
+    x = x ^ (x >> 16)
+    x = x * _MIX_M1
+    x = x ^ (x >> 13)
+    x = x * _MIX_M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def fold_key(*parts: int) -> np.uint32:
+    """Fold integer key parts into one uint32 base key (pure Python ints
+    internally, so no overflow warnings; order-sensitive)."""
+    k = 0x9E3779B9
+    for p in parts:
+        k ^= int(p) & 0xFFFFFFFF
+        # inline scalar mix32 on python ints (exact uint32 semantics)
+        k ^= k >> 16
+        k = (k * 0x85EBCA6B) & 0xFFFFFFFF
+        k ^= k >> 13
+        k = (k * 0xC2B2AE35) & 0xFFFFFFFF
+        k ^= k >> 16
+    return np.uint32(k)
+
+
+def hop_base_key(seed: int, batch_index: int, hop: int,
+                 epoch: Optional[int] = None) -> np.uint32:
+    """Base key for one sampling hop — the determinism contract: a pure
+    function of (sampler seed, epoch, batch index, hop), with ``epoch=None``
+    distinct from every integer epoch."""
+    etag = 0 if epoch is None else int(epoch) + 1
+    return fold_key(seed, etag, batch_index, hop)
+
+
+def edge_sample_keys(base_key, pos):
+    """Per-candidate uint32 sort key: candidates with the k smallest keys in
+    their (destination, etype) bin are the sampled edges. ``pos`` is the
+    candidate's destination-sorted edge position — the shared host/device
+    candidate enumeration — and the full re-hash of (position XOR base key)
+    decorrelates the per-batch orderings."""
+    pos_u32 = (pos.astype(np.uint32) if isinstance(pos, np.ndarray)
+               else pos.astype("uint32"))
+    return mix32(pos_u32 ^ base_key)
+
+
 def normalize_fanout(fanout: FanoutSpec, num_etypes: int) -> np.ndarray:
     """Per-etype fanout vector [R]; -1 means the full neighborhood."""
     if isinstance(fanout, (int, np.integer)):
         return np.full(num_etypes, int(fanout), dtype=np.int64)
     if isinstance(fanout, dict):
-        arr = np.zeros(num_etypes, dtype=np.int64)  # unlisted etypes: drop
+        arr = np.zeros(num_etypes, dtype=np.int64)
+        unlisted = sorted(set(range(num_etypes)) - {int(e) for e in fanout})
+        if unlisted:
+            warnings.warn(
+                f"dict fanout leaves {len(unlisted)} of {num_etypes} etypes "
+                f"unlisted (e.g. {unlisted[:5]}); they default to fanout 0 "
+                f"(drop all edges of that type). Pass an explicit 0 to "
+                f"silence this.", UserWarning, stacklevel=2)
         for et, k in fanout.items():
             arr[int(et)] = int(k)
         return arr
@@ -145,27 +218,27 @@ class FanoutSampler:
                epoch: Optional[int] = None) -> BlockSequence:
         """Sample a ``BlockSequence`` for ``seeds``.
 
-        The rng is keyed by ``(sampler seed, batch_index)`` — or
-        ``(sampler seed, epoch, batch_index)`` when ``epoch`` is given, the
-        epoch-aware training contract: replaying a step reproduces its
+        Randomness is keyed by ``(sampler seed, batch_index, hop)`` — or
+        ``(sampler seed, epoch, batch_index, hop)`` when ``epoch`` is given,
+        the epoch-aware training contract: replaying a step reproduces its
         blocks exactly, while the same seed batch in a different epoch
-        draws a fresh neighborhood.
+        draws a fresh neighborhood. The keying is counter-based
+        (``hop_base_key``/``edge_sample_keys``), the exact scheme the device
+        sampler evaluates — identical inputs select identical edges on both.
         """
         seeds = np.asarray(seeds, dtype=np.int32)
         if seeds.ndim != 1 or seeds.size == 0:
             raise ValueError("seeds must be a non-empty 1-D int array")
         if seeds.min() < 0 or seeds.max() >= self.hg.num_nodes:
             raise ValueError("seed node id out of range")
-        key = ((self.seed, int(batch_index)) if epoch is None
-               else (self.seed, int(epoch), int(batch_index)))
-        rng = np.random.default_rng(key)
 
         frontier = np.unique(seeds)
         seed_perm = np.searchsorted(frontier, seeds).astype(np.int32)
 
         blocks: List[Block] = []
-        for fanout in reversed(self.fanouts):
-            src, dst, et = self._sample_in_edges(frontier, fanout, rng)
+        for hop, fanout in enumerate(reversed(self.fanouts)):
+            base = hop_base_key(self.seed, int(batch_index), hop, epoch)
+            src, dst, et = self._sample_in_edges(frontier, fanout, base)
             node_ids = np.unique(np.concatenate([frontier, src]))
             bg = HeteroGraph.from_edges(
                 np.searchsorted(node_ids, src).astype(np.int32),
@@ -185,7 +258,7 @@ class FanoutSampler:
 
     # ------------------------------------------------------------------
     def _sample_in_edges(self, frontier: np.ndarray, fanout: np.ndarray,
-                         rng: np.random.Generator):
+                         base_key: np.uint32):
         """Sample ≤ fanout[etype] in-edges per (frontier node, etype),
         without replacement. Returns global (src, dst, etype) arrays."""
         hg = self.hg
@@ -203,10 +276,13 @@ class FanoutSampler:
         owner = np.repeat(np.arange(len(frontier), dtype=np.int64), counts)
         et = self._etype_d[pos].astype(np.int64)
 
-        # rank candidates within each (owner, etype) group by a random key;
-        # keep ranks < fanout[etype]  == uniform sampling w/o replacement.
+        # rank candidates within each (owner, etype) group by their
+        # counter-based key; keep ranks < fanout[etype]  == uniform sampling
+        # w/o replacement. lexsort is stable, so equal keys tie-break by
+        # ascending position — the same total order the device sampler's
+        # stable argsort produces.
         group = owner * hg.num_etypes + et
-        order = np.lexsort((rng.random(total), group))
+        order = np.lexsort((edge_sample_keys(base_key, pos), group))
         g_sorted = group[order]
         boundary = np.concatenate([[True], g_sorted[1:] != g_sorted[:-1]])
         group_start = np.flatnonzero(boundary)

@@ -24,7 +24,7 @@ from repro.core.graph import HeteroGraph
 from repro.core.module import HectorStack
 from repro.models import (hgt_program, rgat_program, rgcn_cat_program,
                           rgcn_program)
-from repro.sampling import FanoutSampler, MiniBatchLoader
+from repro.sampling import DeviceSampler, FanoutSampler, MiniBatchLoader
 
 MODEL_PROGRAMS = {"rgcn": rgcn_program, "rgat": rgat_program,
                   "hgt": hgt_program, "rgcn_cat": rgcn_cat_program}
@@ -71,6 +71,10 @@ class EngineConfig:
     bucket: bool = True
     activation: str = "relu"
     seed: int = 0
+    # "host": NumPy FanoutSampler + host layout build; "device": jit-compiled
+    # sampling + layout over a device-resident CSC (same counter-based
+    # selection, so both produce equivalent block streams under one seed)
+    sampler: str = "host"
     tune: str = "off"                    # off | cached | full
     tune_cache: Optional[str] = None     # persistent decision cache path
     # False for block-path-only callers (serving): keeps the materialization
@@ -89,6 +93,8 @@ class EngineConfig:
                 f"(@hector.model / prog_fn); got {type(self.model).__name__}")
         if self.tune not in ("off", "cached", "full"):
             raise ValueError(f"tune={self.tune!r}; pick off/cached/full")
+        if self.sampler not in ("host", "device"):
+            raise ValueError(f"sampler={self.sampler!r}; pick host/device")
         self.fanouts = list(self.fanouts) if self.fanouts is not None \
             else [5] * self.layers
         if len(self.fanouts) != self.layers:
@@ -148,6 +154,16 @@ class RGNNEngine:
             compact_vars=compact_vars, decisions=self.decisions,
         )
         self.sampler = FanoutSampler(graph, cfg.fanouts, seed=cfg.seed)
+        # the device pipeline: uploads the CSC once at engine build; shares
+        # the host sampler's seed so both paths draw the same edge streams
+        self.device_sampler = None
+        if cfg.sampler == "device":
+            # blocks keep the configured tile (see make_loader), so the
+            # device layouts match what the host pipeline would have built
+            self.device_sampler = DeviceSampler(
+                graph, cfg.fanouts, seed=cfg.seed,
+                tile=cfg.tile, node_block=cfg.node_block,
+                backend=cfg.backend)
         # compiled sampled-train-step executors, one per optimizer instance
         # (shared by the hector.compile facade and SampledTrainer so the
         # same (plans, opt) pair never compiles twice)
@@ -210,9 +226,15 @@ class RGNNEngine:
         Blocks keep the *configured* tile (not the tuned full-graph layout
         tile): the layout decision is measured at full-graph scale and does
         not transfer to sampled-block shapes — the block-scale op variants
-        are instead tuned against these layouts via ``tune_minibatch``."""
+        are instead tuned against these layouts via ``tune_minibatch``.
+
+        With ``cfg.sampler == "device"`` the loader gets the
+        ``DeviceSampler`` and switches to the threadless async-dispatch
+        prefetch (sampling + layout as enqueued device work)."""
+        active = self.device_sampler if self.device_sampler is not None \
+            else self.sampler
         return MiniBatchLoader(
-            self.sampler, seed_source,
+            active, seed_source,
             tile=self.cfg.tile, node_block=self.cfg.node_block,
             bucket=self.cfg.bucket, depth=depth, start_step=start_step,
             num_batches=num_batches, cache_blocks=cache_blocks,

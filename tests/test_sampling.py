@@ -367,3 +367,172 @@ def test_serve_rgnn_end_to_end():
     assert stats["latency_ms_p50"] > 0
     assert stats["seeds_per_s"] > 0
     assert stats["last_preds"].shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# fanout normalization
+# ---------------------------------------------------------------------------
+def test_dict_fanout_warns_on_unlisted_etypes(graph):
+    """Pin the (surprising) dict-fanout default: etypes absent from the dict
+    sample zero edges, and the sampler now says so out loud."""
+    from repro.sampling.sampler import normalize_fanout
+
+    with pytest.warns(UserWarning, match="unlisted"):
+        f = normalize_fanout({0: 3, 2: 5}, graph.num_etypes)
+    np.testing.assert_array_equal(
+        f, [3, 0, 5] + [0] * (graph.num_etypes - 3))
+    # sampling with it really draws no edges of the unlisted etypes
+    with pytest.warns(UserWarning):
+        seq = FanoutSampler(graph, [{0: 3, 2: 5}], seed=0).sample(SEEDS)
+    assert set(np.unique(seq.blocks[0].graph.etype)) <= {0, 2}
+    # a complete dict stays silent
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        normalize_fanout({e: 2 for e in range(graph.num_etypes)},
+                         graph.num_etypes)
+
+
+# ---------------------------------------------------------------------------
+# device-native sampling (ISSUE 7): host/device parity + retrace-freeness
+# ---------------------------------------------------------------------------
+from repro.sampling import DeviceSampler  # noqa: E402
+
+
+def _device_block_edges(mb, hop, num_nodes):
+    """Global (src, dst, etype) multiset of one device block's real edges."""
+    nid = np.asarray(mb.seq.blocks[hop].node_ids)
+    gt = mb.tensors[hop]
+    src_g = nid[np.asarray(gt.src)]
+    dst_g = nid[np.asarray(gt.dst)]
+    et = np.asarray(gt.etype)
+    valid = (src_g < num_nodes) & (dst_g < num_nodes)
+    return sorted(zip(src_g[valid].tolist(), dst_g[valid].tolist(),
+                      et[valid].tolist()))
+
+
+@pytest.mark.parametrize("fanouts", [[3, 3], [2, 4], [1]])
+def test_device_sampler_matches_host_blocks(graph, fanouts):
+    """The determinism contract: for the same (seed, batch_index, epoch)
+    stream position both pipelines select the same edge multisets per
+    (dst, etype) and produce the same frontier node sets."""
+    host = FanoutSampler(graph, fanouts, seed=11)
+    dev = DeviceSampler(graph, fanouts, seed=11, tile=8, node_block=8)
+    for bi in (0, 1, 5):
+        seq = host.sample(SEEDS, batch_index=bi)
+        mb = dev.sample_minibatch(SEEDS, batch_index=bi)
+        for hop in range(len(fanouts)):
+            hb = seq.blocks[hop]
+            host_edges = sorted(zip(
+                hb.node_ids[hb.graph.src].tolist(),
+                hb.node_ids[hb.graph.dst].tolist(),
+                hb.graph.etype.tolist()))
+            assert _device_block_edges(mb, hop, graph.num_nodes) \
+                == host_edges
+            nid = np.asarray(mb.seq.blocks[hop].node_ids)
+            np.testing.assert_array_equal(nid[nid < graph.num_nodes],
+                                          hb.node_ids)
+        np.testing.assert_array_equal(np.asarray(mb.seed_perm),
+                                      seq.seed_perm)
+
+
+def test_device_sampler_epoch_rekeys_stream(graph):
+    dev = DeviceSampler(graph, [3, 3], seed=0, tile=8, node_block=8)
+    a = _device_block_edges(dev.sample_minibatch(SEEDS, epoch=0), 0,
+                            graph.num_nodes)
+    b = _device_block_edges(dev.sample_minibatch(SEEDS, epoch=1), 0,
+                            graph.num_nodes)
+    host = FanoutSampler(graph, [3, 3], seed=0)
+    ha = host.sample(SEEDS, epoch=0).blocks[0]
+    assert a != b
+    assert a == sorted(zip(ha.node_ids[ha.graph.src].tolist(),
+                           ha.node_ids[ha.graph.dst].tolist(),
+                           ha.graph.etype.tolist()))
+
+
+@pytest.mark.parametrize("prog_fn", [rgcn_program, rgat_program,
+                                     hgt_program])
+def test_device_minibatch_forward_matches_host(graph, feats, prog_fn):
+    """A device-built MiniBatch is a drop-in: same per-seed outputs as the
+    host-built one for the same stream position."""
+    stack = HectorStack([prog_fn(16, 12), prog_fn(12, 6)], graph,
+                        tile=8, node_block=8, jit=False)
+    params = stack.init(jax.random.key(0))
+    mb_h = build_minibatch(
+        FanoutSampler(graph, [3, 3], seed=11).sample(SEEDS, batch_index=2),
+        tile=8, node_block=8, bucket=True)
+    mb_d = DeviceSampler(graph, [3, 3], seed=11, tile=8, node_block=8) \
+        .sample_minibatch(SEEDS, batch_index=2)
+    out_h = stack.apply_blocks(params, mb_h, feats)
+    out_d = stack.apply_blocks(params, mb_d, feats)
+    np.testing.assert_allclose(out_d, out_h, rtol=2e-4, atol=2e-4)
+
+
+def test_device_full_fanout_matches_full_graph(graph, feats):
+    stack = HectorStack([rgat_program(16, 12), rgat_program(12, 6)], graph,
+                        tile=8, node_block=8, jit=False)
+    params = stack.init(jax.random.key(0))
+    full = stack.apply(params, {"feature": feats})
+    mb = DeviceSampler(graph, [-1, -1], seed=0, tile=8, node_block=8) \
+        .sample_minibatch(SEEDS)
+    out = stack.apply_blocks(params, mb, feats)
+    assert out.shape == (len(SEEDS), 6)
+    np.testing.assert_allclose(out, full[SEEDS], rtol=2e-4, atol=2e-4)
+
+
+def test_device_sampler_retrace_free_in_steady_state(graph):
+    """Fixed-shape bucketing: recurring stream positions (the power-law
+    serving assumption — same seeds at the same batch_index resample the
+    same buckets) replay already-traced programs, zero jit retraces."""
+    dev = DeviceSampler(graph, [3, 3], seed=2, tile=8, node_block=8)
+    stream = SeedStream(graph.num_nodes, 6, seed=5, num_distinct=3)
+    for step in range(3):
+        dev.sample_minibatch(stream.batch(step), batch_index=step % 3)
+    warm = dev.trace_count
+    assert warm == dev.cache_misses
+    for step in range(3, 9):
+        dev.sample_minibatch(stream.batch(step), batch_index=step % 3)
+    assert dev.trace_count == warm
+    assert dev.cache_hits > 0
+
+
+def test_device_loader_threadless_prefetch(graph, feats):
+    """MiniBatchLoader in device mode: same iteration/StopIteration contract
+    and block-cache semantics, zero host pipeline builds."""
+    dev = DeviceSampler(graph, [3, 3], seed=2, tile=8, node_block=8)
+    distinct, total = 2, 6
+    loader = MiniBatchLoader(
+        dev, SeedStream(graph.num_nodes, 6, seed=5, num_distinct=distinct),
+        tile=8, node_block=8, bucket=True, num_batches=total,
+        cache_blocks=8)
+    try:
+        batches = list(loader)
+    finally:
+        loader.close()
+    assert loader.mode == "device"
+    assert [mb.step for mb in batches] == list(range(total))
+    assert loader.host_builds == 0
+    assert loader.device_builds == distinct   # repeats hit the block cache
+    assert loader.cache_stats()["block_cache"]["hits"] == total - distinct
+    with pytest.raises(StopIteration):
+        next(loader)
+    # repeated batches reference the same device-built blocks
+    np.testing.assert_array_equal(
+        np.asarray(batches[0].tensors[0].src),
+        np.asarray(batches[distinct].tensors[0].src))
+
+
+def test_device_graph_csc_consistent(graph):
+    """The uploaded CSC is exactly the (dst-major, etype-minor) view of the
+    host graph's dst-sorted edges."""
+    dg = graph.to_device_graph()
+    indptr = np.asarray(dg.csc_indptr)
+    csc_src = np.asarray(dg.csc_src)
+    assert indptr[-1] == graph.num_edges
+    r = graph.num_etypes
+    et_dst_sorted = graph.etype[graph.perm_dst]
+    for v, t in [(3, 0), (50, 2), (119, r - 1)]:
+        lo, hi = indptr[v * r + t], indptr[v * r + t + 1]
+        mask = (graph.dst_sorted == v) & (et_dst_sorted == t)
+        np.testing.assert_array_equal(csc_src[lo:hi],
+                                      graph.src[graph.perm_dst][mask])
