@@ -12,6 +12,10 @@ through both sampling pipelines and pins the device path's contract:
   (``sampler_retraces_after_warmup == 0``);
 * **zero executor retraces after warmup** — device-built blocks land in the
   same bucketed-shape set, so the compiled block executor also replays.
+* **zero count syncs, zero bucket overflows** — the sync-free bucket
+  speculation never blocks on a stage-A count readback (the counters would
+  expose a reintroduced blocking drain) and never truncates a batch with an
+  under-sized shrunken bucket.
 
 ``--ci`` turns any violation into a failing exit code.
 
@@ -27,8 +31,12 @@ from benchmarks.common import csv_row
 
 CONFIG = dict(
     model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
-    classes=4, fanouts=[3, 3], batch_size=8, num_batches=9, tile=8,
+    classes=4, fanouts=[3, 3], batch_size=8, num_batches=12, tile=8,
     node_block=8, repeat_after=3, seed=0,
+    # two full repeat cycles of warmup: the first cycle traces the
+    # worst-case buckets, the second traces the shrunken ones after the
+    # non-blocking count drains land
+    warmup_batches=6,
 )
 
 
@@ -59,6 +67,14 @@ def run(out=print):
         problems.append(
             f"block executor retraced {d['retraces_after_warmup']} times "
             f"after warmup of the device stream")
+    if d.get("sampler_count_syncs", 0) != 0:
+        problems.append(
+            f"device sampler blocked on {d['sampler_count_syncs']} count "
+            f"readbacks (want a sync-free loop)")
+    if d.get("sampler_bucket_overflows", 0) != 0:
+        problems.append(
+            f"{d['sampler_bucket_overflows']} stage-B bucket overflows "
+            f"(shrunken guess truncated a batch)")
     # both pipelines must draw the same selection stream (shared
     # counter-based keys): identical last-batch predictions
     if d["last_preds"].tolist() != h["last_preds"].tolist():
@@ -71,6 +87,9 @@ def run(out=print):
                 f"sampler_traces={d['sampler_traces']};"
                 f"sampler_retraces={d['sampler_retraces_after_warmup']};"
                 f"exec_retraces={d['retraces_after_warmup']};"
+                f"count_syncs={d.get('sampler_count_syncs', 0)};"
+                f"bucket_overflows={d.get('sampler_bucket_overflows', 0)};"
+                f"bucket_shrinks={d.get('sampler_bucket_shrinks', 0)};"
                 f"problems={len(problems)}"))
     out(csv_row("sample_native/host", h["latency_ms_p50"] / 1e3,
                 f"host_builds={h['host_builds']};"
@@ -88,8 +107,9 @@ def ci_check() -> None:
         raise SystemExit(1)
     print(f"[sample_native --ci] OK: {d['device_builds']} device-built "
           f"batches, 0 host builds, {d['sampler_traces']} sampler traces "
-          f"(0 after warmup), 0 executor retraces; device p50 "
-          f"{d['latency_ms_p50']:.1f} ms")
+          f"(0 after warmup), 0 executor retraces, 0 count syncs, "
+          f"{d.get('sampler_bucket_shrinks', 0)} bucket shrinks "
+          f"(0 overflows); device p50 {d['latency_ms_p50']:.1f} ms")
 
 
 def main(argv=None):

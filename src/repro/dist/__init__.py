@@ -1,0 +1,33 @@
+"""Data-parallel execution over a partitioned hetero graph.
+
+The distributed layer slots between the single-box compile-and-serve stack
+and the mesh machinery in ``launch/mesh.py``:
+
+* ``partition``  — edge-cut-by-destination partitioner over the canonical
+  etype-sorted COO: per-shard CSR slices, halo tables, shard subgraphs.
+* ``sampler``    — ``ShardedSampler``: per-shard fanout sampling that draws
+  the *same* counter-based key stream as the single-box ``FanoutSampler``
+  (selection per (dst, etype) bin is keyed by full-graph dst-sorted edge
+  positions, so it is independent of which shard evaluates it).
+* ``data``       — ``ShardedBatcher``: routes each seed batch to its owner
+  shards, samples per shard, pads every shard's blocks to common cross-shard
+  buckets, and stacks the per-hop pytrees into ``[P, ...]`` arrays ready for
+  ``shard_map``.
+* ``executor``   — ``ShardedServeExecutor`` / ``ShardedTrainExecutor``: one
+  jitted, donated-state callable per shape bucket that runs every shard's
+  block forward (and backward + AdamW update) under ``shard_map`` over a
+  data-only mesh, with the halo-feature all-gather and the gradient
+  all-reduce *inside* the compiled step.
+"""
+from repro.dist.partition import (GraphPartition, partition_graph,
+                                  check_partition)
+from repro.dist.sampler import ShardedSampler
+from repro.dist.data import ShardedBatcher, ShardedMiniBatch
+from repro.dist.executor import ShardedServeExecutor, ShardedTrainExecutor
+from repro.dist.trainer import DistTrainer
+
+__all__ = [
+    "GraphPartition", "partition_graph", "check_partition",
+    "ShardedSampler", "ShardedBatcher", "ShardedMiniBatch",
+    "ShardedServeExecutor", "ShardedTrainExecutor", "DistTrainer",
+]

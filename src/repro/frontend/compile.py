@@ -145,6 +145,8 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
     activation: str = "relu",
     seed: int = 0,
     sampler: str = "host",
+    dp: int = 1,
+    partitions: Optional[int] = None,
     tune: str = "off",
     tune_cache: Optional[str] = None,
     tune_full_graph: bool = True,
@@ -167,6 +169,14 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
     (same fanout every hop), a per-layer sequence, or ``-1`` for full
     neighborhoods. ``tune`` in {"off", "cached", "full"} runs the
     autotuner exactly as the drivers' ``--tune`` flag does.
+
+    ``dp`` / ``partitions``: data-parallel execution (``repro.dist``) —
+    the graph is edge-cut into ``partitions`` shards (default one per
+    device) and the compiled train/serve steps run all shards under
+    ``shard_map`` over a ``dp``-device data mesh, halo-feature exchange
+    and gradient all-reduce included. The engine then exposes
+    ``dist_batcher`` / ``dist_train_executor(opt)`` /
+    ``dist_serve_executor()`` / ``shard_features(feats)``.
 
     ``config``: a prebuilt ``train.engine.EngineConfig`` (overrides every
     other compilation kwarg; ``model`` still wins if non-None).
@@ -198,6 +208,7 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
             model=prog_fn, layers=layers, dim=dim, hidden=hidden,
             classes=classes, fanouts=sample, backend=backend, tile=tile,
             node_block=node_block, bucket=bucket, activation=activation,
-            seed=seed, sampler=sampler, tune=tune, tune_cache=tune_cache,
+            seed=seed, sampler=sampler, dp=dp, partitions=partitions,
+            tune=tune, tune_cache=tune_cache,
             tune_full_graph=tune_full_graph)
     return CompiledRGNN(RGNNEngine(graph, cfg, log=log), opt=opt)

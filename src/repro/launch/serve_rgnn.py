@@ -52,6 +52,8 @@ def serve(
     bucket: bool = True,
     seed: int = 0,
     sampler: str = "host",
+    dp: int = 1,
+    partitions=None,
     prefetch_depth: int = 2,
     cache_blocks: int = 0,
     cache_layouts: int = 0,
@@ -97,17 +99,18 @@ def serve(
         return _serve_scoped(
             sc, model, dataset, scale, layers, dim, hidden, classes,
             fanouts, batch_size, num_batches, backend, tile, node_block,
-            bucket, seed, sampler, prefetch_depth, cache_blocks,
-            cache_layouts, repeat_after, compiled, warmup_batches, tune,
-            tune_cache, trace_out, metrics_out, profile, log)
+            bucket, seed, sampler, dp, partitions, prefetch_depth,
+            cache_blocks, cache_layouts, repeat_after, compiled,
+            warmup_batches, tune, tune_cache, trace_out, metrics_out,
+            profile, log)
 
 
 def _serve_scoped(
     sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
     batch_size, num_batches, backend, tile, node_block, bucket, seed,
-    sampler, prefetch_depth, cache_blocks, cache_layouts, repeat_after,
-    compiled, warmup_batches, tune, tune_cache, trace_out, metrics_out,
-    profile, log,
+    sampler, dp, partitions, prefetch_depth, cache_blocks, cache_layouts,
+    repeat_after, compiled, warmup_batches, tune, tune_cache, trace_out,
+    metrics_out, profile, log,
 ):
 
     t0 = time.perf_counter()
@@ -122,13 +125,19 @@ def _serve_scoped(
         model, graph, layers=layers, dim=dim, hidden=hidden,
         classes=classes, sample=fanouts, backend=backend, tile=tile,
         node_block=node_block, bucket=bucket, seed=seed, sampler=sampler,
-        tune=tune, tune_cache=tune_cache, tune_full_graph=False, log=log)
+        dp=dp, partitions=partitions, tune=tune, tune_cache=tune_cache,
+        tune_full_graph=False, log=log)
     fanouts = engine.cfg.fanouts
     log(f"[serve_rgnn] {model} on {dataset} (scale {scale}): "
         f"{graph.num_nodes} nodes, {graph.num_edges} edges, "
         f"{graph.num_etypes} etypes; fanouts={fanouts} "
         f"sampler={sampler} (graph build {t_graph:.2f}s)")
     params = engine.init(jax.random.key(seed))
+
+    if engine.cfg.distributed:
+        return _serve_dist(engine, graph, feats, params, batch_size,
+                           num_batches, repeat_after, warmup_batches, seed,
+                           sc, metrics_out, log)
 
     if tune != "off":
         # block-scale tuning on one representative (bucketed) mini-batch,
@@ -165,6 +174,7 @@ def _serve_scoped(
     traces_at_warmup = None
     dev_sampler = getattr(engine, "device_sampler", None)
     sampler_traces_at_warmup = None
+    sampler_syncs_at_warmup = None
     last_mb = None
     t_serve0 = time.perf_counter()
     try:
@@ -180,6 +190,7 @@ def _serve_scoped(
                 traces_at_warmup = executor.trace_count
                 if dev_sampler is not None:
                     sampler_traces_at_warmup = dev_sampler.trace_count
+                    sampler_syncs_at_warmup = dev_sampler.count_syncs
             t0 = time.perf_counter()
             # engine.apply_blocks opens the "execute" span (with a device
             # sync inside it when tracing is on)
@@ -235,11 +246,20 @@ def _serve_scoped(
         stats["sampler_retraces_after_warmup"] = (
             dev_sampler.trace_count - sampler_traces_at_warmup
             if sampler_traces_at_warmup is not None else 0)
+        stats["sampler_count_syncs"] = dev_sampler.count_syncs
+        stats["sampler_count_syncs_after_warmup"] = (
+            dev_sampler.count_syncs - sampler_syncs_at_warmup
+            if sampler_syncs_at_warmup is not None
+            else dev_sampler.count_syncs)
+        stats["sampler_bucket_overflows"] = dev_sampler.bucket_overflows
+        stats["sampler_bucket_shrinks"] = dev_sampler.bucket_shrinks
         log(f"[serve_rgnn] device sampler: {dev_sampler.trace_count} traces "
             f"/ {dev_sampler.cache_hits} program-cache hits "
             f"({stats['sampler_retraces_after_warmup']} retraces after "
-            f"warmup); builds host {loader.host_builds} / device "
-            f"{loader.device_builds}")
+            f"warmup); {dev_sampler.count_syncs} count syncs, "
+            f"{dev_sampler.bucket_shrinks} bucket shrinks, "
+            f"{dev_sampler.bucket_overflows} overflows; builds host "
+            f"{loader.host_builds} / device {loader.device_builds}")
     if obs.metrics_enabled():
         # registry-sourced latency percentiles (the reservoir keeps every
         # sample at this scale, so these match the array-side numbers)
@@ -291,6 +311,87 @@ def _serve_scoped(
     return stats
 
 
+def _serve_dist(engine, graph, feats, params, batch_size, num_batches,
+                repeat_after, warmup_batches, seed, sc, metrics_out, log):
+    """Multi-shard serving loop: route each request batch to its owner
+    shards, sample per shard, run the one compiled ``shard_map`` step,
+    report request-order predictions. Stats keys mirror the single-box
+    loop so benchmarks/tests compare the two paths directly."""
+    cfg = engine.cfg
+    log(f"[serve_rgnn] distributed: {cfg.num_partitions} shards over "
+        f"{cfg.dp} devices\n" + engine.partition.describe())
+    batcher = engine.dist_batcher
+    serve_ex = engine.dist_serve_executor()
+    own_feats = engine.shard_features(feats)
+    stream = SeedStream(graph.num_nodes, batch_size, seed=seed,
+                        num_distinct=repeat_after)
+
+    lat, waits, computes, preds = [], [], [], None
+    traces_at_warmup = None
+    t_serve0 = time.perf_counter()
+    for step in range(num_batches):
+        if step == warmup_batches:
+            traces_at_warmup = serve_ex.trace_count
+        t0 = time.perf_counter()
+        with obs.span("wait", batch=step):
+            smb = batcher.build(stream.batch(step), step=step)
+        t_wait = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with obs.span("execute", step=step):
+            logits = serve_ex.run_minibatch(params, smb, own_feats)
+            logits.block_until_ready()
+        t_fwd = time.perf_counter() - t0
+        lat.append(t_wait + t_fwd)
+        waits.append(t_wait)
+        computes.append(t_fwd)
+        obs.metrics().histogram("serve_batch_ms").observe(
+            (t_wait + t_fwd) * 1e3)
+        preds = np.asarray(jnp.argmax(logits, axis=-1))
+        log(f"[serve_rgnn] batch {step}: route+sample {t_wait*1e3:6.1f} ms, "
+            f"forward {t_fwd*1e3:6.1f} ms")
+    t_total = time.perf_counter() - t_serve0
+    if traces_at_warmup is None:
+        traces_at_warmup = serve_ex.trace_count
+
+    lat_arr = np.asarray(lat)
+    stats = {
+        "batches": num_batches,
+        "batch_size": batch_size,
+        "dp": cfg.dp,
+        "num_partitions": cfg.num_partitions,
+        "latency_ms_p50": float(np.percentile(lat_arr, 50) * 1e3),
+        "latency_ms_p95": float(np.percentile(lat_arr, 95) * 1e3),
+        "latency_ms_p99": float(np.percentile(lat_arr, 99) * 1e3),
+        "latency_ms_mean": float(lat_arr.mean() * 1e3),
+        "wait_ms_mean": float(np.mean(waits) * 1e3),
+        "compute_ms_mean": float(np.mean(computes) * 1e3),
+        "seeds_per_s": batch_size * num_batches / max(t_total, 1e-9),
+        "last_preds": preds,
+        "warmup_batches": warmup_batches,
+        "executor_traces": serve_ex.trace_count,
+        "executor_cache_hits": serve_ex.cache_hits,
+        "executor_compiled": serve_ex.num_compiled,
+        "retraces_after_warmup": serve_ex.trace_count - traces_at_warmup,
+        "host_builds": batcher.host_builds,
+        "device_builds": 0,
+        "sampler": "sharded",
+    }
+    for k, v in batcher.stats().items():
+        stats[f"batcher_{k}"] = v
+    log(f"[serve_rgnn] served {num_batches} batches x {batch_size} seeds "
+        f"on {cfg.num_partitions} shards / {cfg.dp} devices: "
+        f"latency p50 {stats['latency_ms_p50']:.1f} ms "
+        f"(route+sample {stats['wait_ms_mean']:.1f} + "
+        f"compute {stats['compute_ms_mean']:.1f} ms avg), "
+        f"{stats['retraces_after_warmup']} retraces after warmup")
+    log(f"[serve_rgnn] sample predictions: {preds[:12].tolist()}")
+    if sc is not None:
+        stats["metrics"] = sc.registry.snapshot()
+        if metrics_out:
+            sc.registry.export(metrics_out)
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="rgat", choices=sorted(MODEL_PROGRAMS))
@@ -320,6 +421,14 @@ def main(argv=None):
                          "build; 'device': jit-compiled sampling + layout "
                          "over a device-resident CSC (equivalent block "
                          "streams under one seed)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel device count: shard the graph and "
+                         "serve every request batch across all shards in "
+                         "one compiled shard_map step")
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="graph shard count (default: one per --dp device; "
+                         "a multiple of --dp folds extra shards onto "
+                         "devices with bit-identical results)")
     ap.add_argument("--cache-blocks", type=int, default=0,
                     help="LRU capacity of the sampled-block cache keyed by "
                          "(seeds, fanout); 0 disables")
@@ -373,6 +482,7 @@ def main(argv=None):
         batch_size=args.batch_size, num_batches=args.num_batches,
         backend=args.backend, tile=args.tile, node_block=args.node_block,
         bucket=not args.no_bucket, seed=args.seed, sampler=args.sampler,
+        dp=args.dp, partitions=args.partitions,
         cache_blocks=args.cache_blocks, cache_layouts=args.cache_layouts,
         repeat_after=args.repeat_after or None, compiled=not args.eager,
         tune=args.tune, tune_cache=args.tune_cache,

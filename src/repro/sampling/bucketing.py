@@ -25,20 +25,26 @@ from repro.core.graph import HeteroGraph
 from repro.kernels.layout import pow2ceil
 
 
-def pad_block_graph(bg: HeteroGraph) -> HeteroGraph:
+def pad_block_graph(bg: HeteroGraph, n_target: int = 0, e_target: int = 0,
+                    u_target: int = 0) -> HeteroGraph:
     """Return ``bg`` padded so nodes/edges/unique-pairs hit power-of-two
     buckets. The first ``bg.num_nodes`` node IDs and all real edges keep
     their meaning; everything is rebuilt via ``from_edges`` so every derived
-    product (CSR, compact map, segment pointers) stays consistent."""
+    product (CSR, compact map, segment pointers) stays consistent.
+
+    ``n_target``/``e_target``/``u_target`` raise the buckets to explicit
+    power-of-two sizes (the cross-shard stacking path pads every shard's
+    block to the max bucket over shards so the per-hop pytrees stack into
+    one ``[P, ...]`` array set); 0 keeps the block's own bucket."""
     n, e, u = bg.num_nodes, bg.num_edges, bg.num_unique
     num_r, num_t = bg.num_etypes, bg.num_ntypes
 
-    u_pad = pow2ceil(u + 1)          # +1 guarantees >= 1 pad pair to spend
+    u_pad = max(pow2ceil(u + 1), u_target)  # +1: >= 1 pad pair to spend
     k_u = u_pad - u                  # distinct pad (src, etype) pairs needed
-    e_pad = pow2ceil(e + k_u)
+    e_pad = max(pow2ceil(e + k_u), e_target)
     k_e = e_pad - e
     n_extra = max(1, -(-k_u // num_r))   # pad sources to host k_u pairs
-    n_pad = pow2ceil(n + n_extra)
+    n_pad = max(pow2ceil(n + n_extra), n_target)
 
     # distinct pad pairs first, then repeats of pair 0 up to the edge bucket
     pair_src = (n + np.arange(k_u, dtype=np.int64) // num_r).astype(np.int32)

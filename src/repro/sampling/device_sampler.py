@@ -13,12 +13,19 @@ types, same hop chaining, same seed-order restoration.
 
 Shape discipline (the retrace-freeness contract): every per-hop program is
 compiled for a static (frontier bucket, fanout, count-bucket) tuple. Stage A
-(selection) is shaped by the frontier bucket alone; the host reads back one
-3-vector of counts per hop — the only device->host sync — and rounds them to
-power-of-two buckets that select the stage-B (compaction + layout) program.
-Recurring traffic recurs over a small bucket set, so after warmup every
-batch replays already-traced programs; ``trace_count`` / ``cache_hits`` /
-``cache_misses`` expose that for the ``sample_native`` CI gate.
+(selection) is shaped by the frontier bucket alone; the stage-B
+(compaction + layout) bucket is *predicted*, never read back: each
+``(hop, seed bucket, fanout)`` signature starts from its analytic worst
+case (``fp * sum(k_eff)`` edges, capped by the graph — always correct), and
+one non-blocking drain of past count vectors (``jax.Array.is_ready`` only,
+never a blocking wait) shrinks the guess once to one power-of-two step above
+the observed counts. The steady-state loop therefore issues **zero**
+device->host syncs; ``count_syncs`` / ``bucket_overflows`` /
+``bucket_shrinks`` pin that for the ``sample_native`` CI gate, alongside
+``trace_count`` / ``cache_hits`` / ``cache_misses`` for retrace-freeness.
+A shrunken guess that a later batch outgrows is detected by the same drain
+(``bucket_overflows``) and reset to the worst case; the 2x headroom above
+the observed counts makes that a monitored never-event in practice.
 
 Prefetch overlap needs no thread: both stages are async-dispatched JAX
 computations, so the loader simply dispatches batch k+1's sampling before
@@ -27,6 +34,7 @@ streams of enqueued device work.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import List, Optional, Sequence
 
@@ -44,11 +52,16 @@ from repro.sampling.sampler import (FanoutSpec, hop_base_key,
 
 @dataclasses.dataclass
 class DeviceBlock:
-    """Metadata summary of one device-sampled hop (execution order)."""
+    """Metadata summary of one device-sampled hop (execution order).
 
-    num_src: int      # real (unpadded) nodes in the block
-    num_edges: int    # real sampled edges
-    num_dst: int      # real output-frontier nodes
+    The counts are the static bucket *capacities* (upper bounds on the real
+    counts): the sync-free loop never reads the exact counts back, so the
+    summary reports what was allocated, not what was filled. Real entries
+    are identified in the tensors themselves by the sentinel pads."""
+
+    num_src: int      # node bucket capacity (>= real nodes in the block)
+    num_edges: int    # edge bucket capacity (>= real sampled edges)
+    num_dst: int      # output-frontier capacity (exact for the seed hop)
     node_ids: jnp.ndarray   # [n_pad] sorted global ids, sentinel N pads
 
 
@@ -113,6 +126,15 @@ class DeviceSampler:
         self.cache_hits = 0
         self.cache_misses = 0
         self.batches_sampled = 0
+        # sync-free bucket speculation: per-(hop, frontier bucket, fanout)
+        # stage-B bucket guesses, plus the queue of not-yet-inspected count
+        # vectors (drained only when already resident on host)
+        self._guess = {}          # sig -> (n_pad, e_pad, u_pad)
+        self._shrunk = set()      # sigs whose guess already tightened once
+        self._pending = collections.deque()  # (sig, used_buckets, counts)
+        self.count_syncs = 0
+        self.bucket_overflows = 0
+        self.bucket_shrinks = 0
 
     @property
     def num_hops(self) -> int:
@@ -142,6 +164,51 @@ class DeviceSampler:
     def _bucket(self, count: int) -> int:
         return max(self.tile, pow2ceil(count + 1))
 
+    def _worst_buckets(self, fp: int, k_eff) -> tuple:
+        """Analytic stage-B buckets that can never overflow: ``fp`` frontier
+        rows each select at most ``sum(k_eff)`` edges (capped by the graph's
+        edge count), the union frontier adds at most one node per edge on
+        top of the frontier itself (capped by N), and the unique
+        (src, etype) pairs are at most the edges."""
+        ksum = max(1, int(sum(k_eff)))
+        e_w = min(self.hg.num_edges, fp * ksum)
+        n_w = min(self.hg.num_nodes, fp + e_w)
+        return (self._bucket(n_w), self._bucket(e_w), self._bucket(e_w))
+
+    def drain(self, block: bool = False) -> None:
+        """Inspect finished stage-A count vectors and tighten bucket
+        guesses. Non-blocking by default — only counts already resident on
+        the host (``is_ready``) are read, so the sampling loop stays
+        sync-free. ``block=True`` waits for everything outstanding (a
+        warmup barrier for benchmarks/tests; each forced wait counts as a
+        ``count_syncs`` readback)."""
+        while self._pending:
+            sig, fp, used, counts = self._pending[0]
+            if not counts.is_ready():
+                if not block:
+                    return
+                self.count_syncs += 1
+            self._pending.popleft()
+            got = tuple(int(x) for x in np.asarray(counts))
+            if any(c + 1 > b for c, b in zip(got, used)):
+                # a shrunken bucket truncated this batch: report it and
+                # fall back to the always-correct worst case
+                self.bucket_overflows += 1
+                self._guess[sig] = self._worst_buckets(fp, sig[2])
+                self._shrunk.discard(sig)
+                continue
+            if sig in self._shrunk:
+                continue
+            worst = self._worst_buckets(fp, sig[2])
+            # one pow2 step of headroom above the first observed counts;
+            # shrink once per signature so steady state never re-buckets
+            new = tuple(min(w, 2 * self._bucket(c))
+                        for c, w in zip(got, worst))
+            if new != self._guess.get(sig, worst):
+                self._guess[sig] = new
+                self.bucket_shrinks += 1
+            self._shrunk.add(sig)
+
     # ------------------------------------------------------------------
     def sample_minibatch(self, seeds: np.ndarray, batch_index: int = 0,
                          epoch: Optional[int] = None, step: int = 0):
@@ -168,9 +235,11 @@ class DeviceSampler:
             lambda: SO.make_prep_seeds(dg.num_nodes, f0))
         frontier, seed_perm = prep(jnp.asarray(seeds))
 
+        self.drain()      # non-blocking: fold in any finished count vectors
+
         hops = []         # sampling order (outermost first)
         num_dst = [None] * nhops
-        prev_real = None  # real node count of the previous hop's union
+        prev_cap = None   # node capacity of the previous hop's union
         for hop in range(nhops):
             k_eff = self._k_eff[nhops - 1 - hop]
             kmax = max(1, max(k_eff))
@@ -184,12 +253,17 @@ class DeviceSampler:
                         dg, k_eff, fp, self.key_backend))
                 union, sel_src, sel_valid, counts = fn_a(
                     dg.csc_indptr, dg.csc_src, frontier, base)
-                # the loop's only device->host sync: three ints that pick
-                # the next static bucket (integer rounding, not layout work)
-                n_next, e_cnt, u_cnt = (int(x) for x in np.asarray(counts))
-            n_pad = self._bucket(n_next)
-            e_pad = self._bucket(e_cnt)
-            u_pad = self._bucket(u_cnt)
+            # sync-free bucket pick: use the signature's current guess
+            # (worst case until a drained count vector tightened it) and
+            # queue the counts for a later non-blocking inspection. The
+            # signature carries the *seed* bucket, not the frontier bucket:
+            # real counts are invariant to padding, so a guess learned
+            # before an earlier hop shrank its frontier stays valid after.
+            sig = (hop, f0, k_eff)
+            guess = self._guess.setdefault(
+                sig, self._worst_buckets(fp, k_eff))
+            n_pad, e_pad, u_pad = guess
+            self._pending.append((sig, fp, guess, counts))
             with obs.span("layout_device", step=step, hop=hop):
                 fn_b = self._compiled(
                     ("B", fp, kmax, n_pad, e_pad, u_pad),
@@ -201,9 +275,9 @@ class DeviceSampler:
                     union, sel_src, sel_valid, frontier, dg.node_type)
             hops.append(dict(gt=gt, kl=kl, node_ids=node_ids,
                              dst_local=dst_local, input_gather=input_gather,
-                             num_src=n_next, num_edges=e_cnt))
-            num_dst[hop] = prev_real if prev_real is not None else None
-            prev_real = n_next
+                             num_src=n_pad, num_edges=e_pad))
+            num_dst[hop] = prev_cap if prev_cap is not None else None
+            prev_cap = n_pad
             frontier = node_ids
 
         # execution order: innermost (last sampled) hop first
@@ -235,4 +309,8 @@ class DeviceSampler:
             "jit_cache_hits": self.cache_hits,
             "jit_cache_misses": self.cache_misses,
             "compiled_programs": len(self._jit),
+            "count_syncs": self.count_syncs,
+            "bucket_overflows": self.bucket_overflows,
+            "bucket_shrinks": self.bucket_shrinks,
+            "pending_counts": len(self._pending),
         }

@@ -223,7 +223,8 @@ class MiniBatch:
 
 def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
                     node_block: int = 128, bucket: bool = False,
-                    layout_cache: Optional[LRUCache] = None) -> MiniBatch:
+                    layout_cache: Optional[LRUCache] = None,
+                    layout_scope=None) -> MiniBatch:
     """Host-side assembly of a ``MiniBatch`` from a sampled ``BlockSequence``.
 
     With ``bucket=True`` (the serving fast path) each block graph, its
@@ -235,7 +236,9 @@ def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
 
     ``layout_cache`` (an ``LRUCache``) memoizes ``KernelLayouts`` by block
     signature, skipping the host-side NumPy layout passes for blocks seen
-    before.
+    before. ``layout_scope`` (any hashable, e.g. a partition id) namespaces
+    the cache entries so callers sharing one cache across graph shards
+    never replay each other's layouts.
     """
     graphs = [b.graph for b in seq.blocks]
     input_ids = seq.input_node_ids
@@ -256,7 +259,7 @@ def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
         if layout_cache is None:
             return codegen.build_kernel_layouts(
                 g, tile=tile, node_block=node_block, bucket=bucket)
-        key = block_signature(g, tile, node_block, bucket)
+        key = (layout_scope, block_signature(g, tile, node_block, bucket))
         kl = layout_cache.get(key)
         if kl is None:
             kl = codegen.build_kernel_layouts(
@@ -275,12 +278,35 @@ def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
     )
 
 
+def _partition_token(partition):
+    """Stable hashable identity of a graph partition (or shard thereof).
+
+    Accepts ``None`` (unpartitioned), a ``repro.dist.GraphPartition``
+    (identified by its shard bounds), a ``(GraphPartition, shard_index)``
+    pair, or any hashable token the caller chooses."""
+    if partition is None:
+        return None
+    if isinstance(partition, tuple) and len(partition) == 2:
+        return (_partition_token(partition[0]), partition[1])
+    bounds = getattr(partition, "bounds", None)
+    if bounds is not None:
+        return ("part", int(getattr(partition, "num_parts", 0)),
+                np.asarray(bounds).tobytes())
+    return partition
+
+
 class MiniBatchLoader:
     """Background-thread prefetch of sampled mini-batches.
 
     ``seed_source`` is a ``SeedStream`` or any ``step -> np.ndarray``
     callable. Iteration yields ``MiniBatch`` in step order; with
     ``num_batches`` set the loader raises ``StopIteration`` afterwards.
+
+    ``partition`` names the graph shard this loader samples from (a
+    ``repro.dist.GraphPartition``, a ``(partition, shard)`` pair, or any
+    hashable id): it becomes part of every block/layout cache key, so
+    multiple shards sharing a process never replay each other's cached
+    blocks.
 
     ``cache_blocks``/``cache_layouts`` give the two LRU capacities (0
     disables either). The sampled-block cache is keyed by
@@ -311,6 +337,7 @@ class MiniBatchLoader:
         num_batches: Optional[int] = None,
         cache_blocks: int = 0,
         cache_layouts: int = 0,
+        partition=None,
     ):
         self.sampler = sampler
         self._seeds_for = (seed_source.batch
@@ -327,6 +354,11 @@ class MiniBatchLoader:
             if cache_layouts else None
         self._fanout_key = tuple(
             tuple(int(x) for x in f) for f in sampler.fanouts)
+        # shard identity: loaders for different partitions of one graph may
+        # share a process (and, via a shared LRUCache, each other's layout
+        # cache) — the partition token keeps their cached blocks/layouts
+        # from colliding on identical local seed ids
+        self._partition_key = _partition_token(partition)
         # a DeviceSampler builds whole MiniBatches on device; everything else
         # goes through the host sample + build_minibatch pipeline
         self.mode = ("device" if hasattr(sampler, "sample_minibatch")
@@ -364,7 +396,7 @@ class MiniBatchLoader:
 
     def _cache_key(self, seeds: np.ndarray, epoch) -> tuple:
         return (seeds.tobytes(), self._fanout_key, self.tile,
-                self.node_block, self.bucket, epoch)
+                self.node_block, self.bucket, epoch, self._partition_key)
 
     def _build(self, step: int) -> MiniBatch:
         seeds = self._seeds_for(step)
@@ -382,7 +414,8 @@ class MiniBatchLoader:
             mb = build_minibatch(seq, step=step, tile=self.tile,
                                  node_block=self.node_block,
                                  bucket=self.bucket,
-                                 layout_cache=self.layout_cache)
+                                 layout_cache=self.layout_cache,
+                                 layout_scope=self._partition_key)
         if self.block_cache is not None:
             self.block_cache.put(key, mb)
         return mb

@@ -264,34 +264,64 @@ class FanoutSampler:
         hg = self.hg
         starts = hg.dst_ptr[frontier].astype(np.int64)
         counts = (hg.dst_ptr[frontier + 1] - hg.dst_ptr[frontier]).astype(np.int64)
-        total = int(counts.sum())
-        empty = np.zeros(0, dtype=np.int32)
-        if total == 0:
+        pos, owner = candidate_positions(starts, counts)
+        if pos.size == 0:
+            empty = np.zeros(0, dtype=np.int32)
             return empty, empty, empty
-
-        # dst-sorted position of every candidate in-edge of the frontier
-        offs = np.concatenate([[0], np.cumsum(counts)])
-        pos = (np.arange(total, dtype=np.int64)
-               - np.repeat(offs[:-1], counts) + np.repeat(starts, counts))
-        owner = np.repeat(np.arange(len(frontier), dtype=np.int64), counts)
         et = self._etype_d[pos].astype(np.int64)
-
-        # rank candidates within each (owner, etype) group by their
-        # counter-based key; keep ranks < fanout[etype]  == uniform sampling
-        # w/o replacement. lexsort is stable, so equal keys tie-break by
-        # ascending position — the same total order the device sampler's
-        # stable argsort produces.
-        group = owner * hg.num_etypes + et
-        order = np.lexsort((edge_sample_keys(base_key, pos), group))
-        g_sorted = group[order]
-        boundary = np.concatenate([[True], g_sorted[1:] != g_sorted[:-1]])
-        group_start = np.flatnonzero(boundary)
-        group_len = np.diff(np.concatenate([group_start, [total]]))
-        rank = np.arange(total, dtype=np.int64) - np.repeat(group_start, group_len)
-        cap = fanout[et[order]]
-        keep = (cap == FULL_NEIGHBORHOOD) | (rank < cap)
-
-        sel = pos[order][keep]
+        sel, sel_owner = select_by_keys(pos, owner, et, fanout, base_key,
+                                        hg.num_etypes)
         src = self._src_d[sel]
-        dst = frontier[owner[order][keep]].astype(np.int32)
+        dst = frontier[sel_owner].astype(np.int32)
         return src.astype(np.int32), dst, self._etype_d[sel].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# the shared selection core (single-box and sharded samplers)
+# ---------------------------------------------------------------------------
+def candidate_positions(starts: np.ndarray, counts: np.ndarray):
+    """Expand per-frontier-node CSR runs ``[start, start+count)`` into the
+    flat candidate position array plus each candidate's frontier index.
+
+    ``starts`` are *global* dst-sorted offsets — shards pass their owned
+    nodes' global ``dst_ptr`` values here, which is how per-shard candidate
+    enumeration lands on the same key domain as the single-box sampler."""
+    starts = np.asarray(starts, dtype=np.int64)
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return (np.zeros(0, dtype=np.int64),) * 2
+    offs = np.concatenate([[0], np.cumsum(counts)])
+    pos = (np.arange(total, dtype=np.int64)
+           - np.repeat(offs[:-1], counts) + np.repeat(starts, counts))
+    owner = np.repeat(np.arange(len(counts), dtype=np.int64), counts)
+    return pos, owner
+
+
+def select_by_keys(pos: np.ndarray, owner: np.ndarray, et: np.ndarray,
+                   fanout: np.ndarray, base_key: np.uint32,
+                   num_etypes: int):
+    """Rank candidates within each (owner, etype) bin by their counter-based
+    key and keep ranks < fanout[etype] — uniform sampling w/o replacement.
+
+    The bin ranking depends only on the candidates *inside* the bin (the
+    keys are pure functions of global position), so any evaluator holding a
+    destination's complete in-edge list — the single-box sampler, the device
+    sampler, or the destination's owner shard — selects the same edges.
+    lexsort is stable, so equal keys tie-break by ascending position, the
+    same total order the device sampler's stable argsort produces.
+
+    Returns ``(sel_pos, sel_owner)``: the kept candidates' positions and
+    frontier indices, in (bin, key) order.
+    """
+    total = int(pos.shape[0])
+    group = owner * num_etypes + et
+    order = np.lexsort((edge_sample_keys(base_key, pos), group))
+    g_sorted = group[order]
+    boundary = np.concatenate([[True], g_sorted[1:] != g_sorted[:-1]])
+    group_start = np.flatnonzero(boundary)
+    group_len = np.diff(np.concatenate([group_start, [total]]))
+    rank = np.arange(total, dtype=np.int64) - np.repeat(group_start, group_len)
+    cap = fanout[et[order]]
+    keep = (cap == FULL_NEIGHBORHOOD) | (rank < cap)
+    return pos[order][keep], owner[order][keep]

@@ -75,6 +75,12 @@ class EngineConfig:
     # sampling + layout over a device-resident CSC (same counter-based
     # selection, so both produce equivalent block streams under one seed)
     sampler: str = "host"
+    # data-parallel execution: ``dp`` devices over a ``partitions``-way
+    # edge-cut partition of the graph (default: one shard per device).
+    # ``partitions`` may exceed ``dp`` — extra shards fold onto devices
+    # (elastic shrink) with bit-identical results for any dp | partitions.
+    dp: int = 1
+    partitions: Optional[int] = None
     tune: str = "off"                    # off | cached | full
     tune_cache: Optional[str] = None     # persistent decision cache path
     # False for block-path-only callers (serving): keeps the materialization
@@ -99,6 +105,21 @@ class EngineConfig:
             else [5] * self.layers
         if len(self.fanouts) != self.layers:
             raise ValueError("one fanout per layer required")
+        if self.dp < 1:
+            raise ValueError("dp must be >= 1")
+        if self.partitions is not None and self.partitions % self.dp:
+            raise ValueError(
+                f"partitions={self.partitions} must be a multiple of "
+                f"dp={self.dp} (shards fold evenly onto devices)")
+
+    @property
+    def num_partitions(self) -> int:
+        """Graph shards P (defaults to one per data-parallel device)."""
+        return self.partitions if self.partitions is not None else self.dp
+
+    @property
+    def distributed(self) -> bool:
+        return self.num_partitions > 1 or self.dp > 1
 
     @property
     def dims(self) -> List[int]:
@@ -169,6 +190,23 @@ class RGNNEngine:
         # same (plans, opt) pair never compiles twice)
         self._train_execs = {}
 
+        # data-parallel pieces: an edge-cut partition, the cross-shard
+        # batcher, and a 1-D data mesh over the first ``dp`` devices. Built
+        # eagerly (cheap host work) so config errors surface at compile
+        # time, not on the first training step.
+        self.partition = None
+        self.dist_batcher = None
+        self.data_mesh = None
+        self._dist_execs = {}
+        if cfg.distributed:
+            from repro.dist import ShardedBatcher, partition_graph
+            from repro.launch.mesh import make_data_mesh
+            self.partition = partition_graph(graph, cfg.num_partitions)
+            self.dist_batcher = ShardedBatcher(
+                self.partition, cfg.fanouts, seed=cfg.seed,
+                tile=cfg.tile, node_block=cfg.node_block)
+            self.data_mesh = make_data_mesh(cfg.dp)
+
     # ------------------------------------------------------------------
     @property
     def plans(self):
@@ -206,6 +244,53 @@ class RGNNEngine:
             self._train_execs[id(opt)] = ex
             while len(self._train_execs) > 4:   # insertion-ordered
                 self._train_execs.pop(next(iter(self._train_execs)))
+        if ex.decisions is not self.decisions:
+            ex.set_decisions(self.decisions)
+        return ex
+
+    # ------------------------------------------------------------------
+    # data-parallel surface (cfg.dp / cfg.partitions)
+    # ------------------------------------------------------------------
+    def _require_dist(self):
+        if self.partition is None:
+            raise ValueError(
+                "distributed execution needs dp > 1 or partitions > 1 in "
+                "the EngineConfig (e.g. hector.compile(..., dp=4))")
+
+    def shard_features(self, feats) -> jnp.ndarray:
+        """Per-owner resident feature slabs ``[P, n_own, d]`` (device-put
+        once; the compiled steps all-gather them for halo access)."""
+        self._require_dist()
+        return jnp.asarray(self.partition.shard_features(np.asarray(feats)))
+
+    def dist_serve_executor(self):
+        """The compiled multi-shard inference step (cached)."""
+        self._require_dist()
+        ex = self._dist_execs.get("serve")
+        if ex is None:
+            from repro.dist import ShardedServeExecutor
+            ex = ShardedServeExecutor(
+                self.plans, self.data_mesh, backend=self.cfg.backend,
+                activation=self.cfg.activation, decisions=self.decisions)
+            self._dist_execs["serve"] = ex
+        if ex.decisions is not self.decisions:
+            ex.set_decisions(self.decisions)
+        return ex
+
+    def dist_train_executor(self, opt):
+        """The compiled multi-shard SGD step for ``opt`` (cached per
+        optimizer instance, like ``train_executor``)."""
+        self._require_dist()
+        ex = self._dist_execs.get(id(opt))
+        if ex is None:
+            from repro.dist import ShardedTrainExecutor
+            ex = ShardedTrainExecutor(
+                self.plans, opt, self.data_mesh, backend=self.cfg.backend,
+                activation=self.cfg.activation, decisions=self.decisions)
+            self._dist_execs[id(opt)] = ex
+            while len(self._dist_execs) > 5:   # never evict the serve step
+                self._dist_execs.pop(next(
+                    k for k in self._dist_execs if k != "serve"))
         if ex.decisions is not self.decisions:
             ex.set_decisions(self.decisions)
         return ex

@@ -483,17 +483,29 @@ def test_device_full_fanout_matches_full_graph(graph, feats):
 def test_device_sampler_retrace_free_in_steady_state(graph):
     """Fixed-shape bucketing: recurring stream positions (the power-law
     serving assumption — same seeds at the same batch_index resample the
-    same buckets) replay already-traced programs, zero jit retraces."""
+    same buckets) replay already-traced programs, zero jit retraces — and
+    the sampling loop itself never blocks on a count readback."""
     dev = DeviceSampler(graph, [3, 3], seed=2, tile=8, node_block=8)
     stream = SeedStream(graph.num_nodes, 6, seed=5, num_distinct=3)
+    # warmup cycle 1 traces the worst-case buckets; the drain barrier lands
+    # every count inspection; cycle 2 traces the shrunken buckets
     for step in range(3):
         dev.sample_minibatch(stream.batch(step), batch_index=step % 3)
+    dev.drain(block=True)
+    assert dev.bucket_shrinks > 0
+    for step in range(3, 6):
+        dev.sample_minibatch(stream.batch(step), batch_index=step % 3)
+    dev.drain(block=True)
     warm = dev.trace_count
+    syncs = dev.count_syncs
     assert warm == dev.cache_misses
-    for step in range(3, 9):
+    for step in range(6, 12):
         dev.sample_minibatch(stream.batch(step), batch_index=step % 3)
     assert dev.trace_count == warm
     assert dev.cache_hits > 0
+    assert dev.count_syncs == syncs   # steady state issued zero readbacks
+    dev.drain(block=True)
+    assert dev.bucket_overflows == 0  # no shrunken bucket truncated a batch
 
 
 def test_device_loader_threadless_prefetch(graph, feats):
