@@ -1,0 +1,189 @@
+"""Tiered feature storage microbenchmark + CI gate (ISSUE 9).
+
+Runs identical Zipf-skewed serving traffic through the three feature
+tiers (device / host / cached) and reports per-gather latency, bytes
+moved, and the cached tier's steady-state hit rate. The cached tier is
+the interesting row: with power-law traffic a small device hot-row cache
+absorbs most of the feature reads, so its per-gather cost and host
+traffic land well below the host tier's.
+
+The tiers are timed *interleaved* — each steady-state batch goes through
+every tier back-to-back and the reported number is the per-tier median —
+so machine-level drift (GC pauses, scheduler noise) hits all tiers
+equally instead of biasing whichever ran last. The scale is chosen so
+data movement, not Python/dispatch overhead, is the dominant cost: that
+is the regime the cache exists for (a wide feature table whose full
+batch gather is expensive to ship).
+
+``--ci`` asserts the contract the cache exists for:
+
+* steady-state hit rate >= 60% under Zipf-skewed traffic with a
+  quarter-table budget;
+* zero (re)traces of the gather programs after warmup (fixed batch size
+  + pow2 miss bucketing => a fixed compiled program set);
+* a fully-hot batch performs **zero** host feature gathers and moves
+  zero bytes;
+* device feature memory stays strictly below the full-table footprint
+  under a forced small budget (the OOM-avoidance property);
+* the cached tier's host traffic (bytes moved) is strictly below the
+  host tier's on the same stream, and its median per-gather latency is
+  no worse than the host tier's (speedup >= 1.0 on CPU);
+* all three tiers return bitwise-identical feature rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.graph import synthetic_heterograph
+from repro.feats import make_feature_store
+from repro.sampling import SeedStream
+
+CONFIG = dict(num_nodes=16000, num_edges=64000, num_ntypes=4, num_etypes=8,
+              seed=0, target_compaction=0.5)
+DIM = 1024
+BATCH = 1024
+WARMUP = 8
+STEADY = 40
+ALPHA = 1.5
+TIERS = ("device", "host", "cached")
+
+
+def _build():
+    graph = synthetic_heterograph(**CONFIG)
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(graph.num_nodes, DIM)).astype(np.float32)
+    stream = SeedStream(graph.num_nodes, BATCH, seed=7, zipf_alpha=ALPHA)
+    batches = [stream.batch(t) for t in range(WARMUP + STEADY)]
+    return graph, feats, batches
+
+
+def _measure(graph, feats, batches):
+    """Warm then time all tiers interleaved; returns per-tier
+    ``(store, median_seconds, checksum, steady)`` keyed by kind."""
+    stores = {
+        kind: make_feature_store(
+            feats, graph, kind=kind,
+            budget=graph.num_nodes // 4 if kind == "cached" else None)
+        for kind in TIERS}
+    for step, ids in enumerate(batches[:WARMUP]):
+        for store in stores.values():
+            store.gather(ids, step=step)
+    cached = stores["cached"]
+    warm_traces, warm_hits, warm_misses = (
+        cached.trace_count, cached.hits, cached.misses)
+
+    times = {kind: [] for kind in TIERS}
+    sums = {kind: 0.0 for kind in TIERS}
+    for step, ids in enumerate(batches[WARMUP:], start=WARMUP):
+        for kind, store in stores.items():
+            t0 = time.perf_counter()
+            out = store.gather(ids, step=step)["feature"]
+            out.block_until_ready()
+            times[kind].append(time.perf_counter() - t0)
+            sums[kind] += float(np.asarray(out).sum())
+
+    sh = cached.hits - warm_hits
+    sm = cached.misses - warm_misses
+    steady = {"hit_rate": sh / max(sh + sm, 1),
+              "retraces": cached.trace_count - warm_traces}
+    return {kind: (stores[kind], float(np.median(times[kind])), sums[kind],
+                   steady if kind == "cached" else {})
+            for kind in TIERS}
+
+
+def run(out=print):
+    results = _measure(*_build())
+    for kind in TIERS:
+        store, per_gather, _, steady = results[kind]
+        derived = (f"bytes_moved={store.bytes_moved};"
+                   f"device_bytes={store.device_bytes()}")
+        if steady:
+            derived += (f";hit_rate={steady['hit_rate']:.2f};"
+                        f"retraces_after_warmup={steady['retraces']}")
+        out(csv_row(f"feature_cache/{kind}_gather", per_gather, derived))
+    return results
+
+
+def ci_check() -> None:
+    """Assertion mode for the CI workflow (exit 1 on failure)."""
+    graph, feats, batches = _build()
+    results = _measure(graph, feats, batches)
+    dev_store, _, dev_sum, _ = results["device"]
+    host_store, host_t, host_sum, _ = results["host"]
+    cached, cached_t, cached_sum, steady = results["cached"]
+
+    failures = []
+    if steady["hit_rate"] < 0.6:
+        failures.append(f"steady-state hit rate {steady['hit_rate']:.2f} "
+                        f"< 0.60 under Zipf({ALPHA}) traffic")
+    if steady["retraces"] != 0:
+        failures.append(f"{steady['retraces']} gather-program retraces "
+                        f"after warmup (expected 0)")
+    if not (dev_sum == host_sum == cached_sum):
+        failures.append(f"tier checksums diverge: device={dev_sum!r} "
+                        f"host={host_sum!r} cached={cached_sum!r}")
+    if cached.bytes_moved >= host_store.bytes_moved:
+        failures.append(f"cached tier moved {cached.bytes_moved} host bytes "
+                        f">= host tier's {host_store.bytes_moved}")
+    speedup = host_t / max(cached_t, 1e-12)
+    if speedup < 1.0:
+        failures.append(f"cached gather slower than host gather "
+                        f"({cached_t*1e6:.0f}us vs {host_t*1e6:.0f}us, "
+                        f"speedup {speedup:.2f}x < 1.0x)")
+
+    # fully-hot batches do zero host feature work
+    hot = make_feature_store(feats, graph, kind="cached",
+                             budget=graph.num_nodes)
+    ids = batches[0]
+    hot.gather(ids, step=0)
+    g0, b0 = hot.host_gathers, hot.bytes_moved
+    np.testing.assert_array_equal(
+        np.asarray(hot.gather(ids, step=1)["feature"]), feats[ids])
+    if hot.host_gathers != g0 or hot.bytes_moved != b0:
+        failures.append("a fully-hot batch touched the host tables "
+                        f"({hot.host_gathers - g0} gathers, "
+                        f"{hot.bytes_moved - b0} bytes)")
+
+    # OOM avoidance: a forced small budget bounds device feature memory
+    # strictly below the full-table footprint
+    tiny = make_feature_store(feats, graph, kind="cached", budget=64)
+    for step, ids in enumerate(batches[:4]):
+        np.testing.assert_array_equal(
+            np.asarray(tiny.gather(ids, step=step)["feature"]), feats[ids])
+    if not tiny.device_bytes() < tiny.table_bytes:
+        failures.append(f"tiny-budget device bytes {tiny.device_bytes()} "
+                        f"not below table bytes {tiny.table_bytes}")
+    if tiny.overflows == 0:
+        failures.append("forced tiny budget produced no overflows "
+                        "(gate is not exercising the overflow path)")
+
+    if failures:
+        for f in failures:
+            print(f"[feature_cache --ci] FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[feature_cache --ci] OK: hit rate {steady['hit_rate']:.2f}, "
+          f"0 retraces after warmup, cached/host speedup {speedup:.2f}x, "
+          f"cached moved {cached.bytes_moved / 1e6:.2f} MB vs host "
+          f"{host_store.bytes_moved / 1e6:.2f} MB, tiny-budget device "
+          f"bytes {tiny.device_bytes()} < table {tiny.table_bytes}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="assertion mode (hit-rate / retrace / memory gate)")
+    args = ap.parse_args(argv)
+    if args.ci:
+        ci_check()
+    else:
+        print("name,us_per_call,derived")
+        run()
+
+
+if __name__ == "__main__":
+    main()

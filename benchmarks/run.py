@@ -16,6 +16,7 @@ tune_smoke — autotuner cold/warm persistent-cache invariants
 obs_smoke — telemetry artifacts (trace + metrics JSON) schema validation
 sample_native — device-native sampling steady-state gate (zero host builds)
 dist_smoke — multi-shard serve/train retrace gate + dp=4 bitwise parity
+feature_cache — tiered feature storage: per-tier gather latency + hot-row cache hit rate
 
 ``--json PATH`` (e.g. ``--json BENCH_table5.json``) additionally writes the
 rows machine-readably — ``{"name", "us_per_call", "derived": {k: v}}`` —
@@ -53,16 +54,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,table5,fig9,fig10,fig11,loc,"
                          "serve,serve_cached,train_sampled,tune_smoke,"
-                         "obs_smoke,sample_native,dist_smoke")
+                         "obs_smoke,sample_native,dist_smoke,feature_cache")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (e.g. BENCH_all.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (dist_smoke, fig8_speedup, fig9_breakdown,
-                            fig10_memory, fig11_dims, loc_report, obs_smoke,
-                            sample_native, serve_cached, serve_sampled,
-                            table5_opts, train_sampled, tune_smoke)
+    from benchmarks import (dist_smoke, feature_cache, fig8_speedup,
+                            fig9_breakdown, fig10_memory, fig11_dims,
+                            loc_report, obs_smoke, sample_native,
+                            serve_cached, serve_sampled, table5_opts,
+                            train_sampled, tune_smoke)
     from repro import obs
 
     rows = []
@@ -88,6 +90,7 @@ def main() -> None:
         ("obs_smoke", obs_smoke.run),
         ("sample_native", sample_native.run),
         ("dist_smoke", dist_smoke.run),
+        ("feature_cache", feature_cache.run),
     ]
     # one enclosing scope: every driver/benchmark scope folds its counters
     # and histograms into this registry on exit, so the JSON snapshot is

@@ -61,7 +61,10 @@ def ci_check(backend: str = "pallas_interpret") -> None:
                                 cache="block_cache") or 0
     block_misses = snapshot_value(m, "loader_cache_misses",
                                   cache="block_cache") or 0
+    block_rate = snapshot_value(m, "loader_cache_hit_rate",
+                                cache="block_cache") or 0.0
     n_repeats = NUM_BATCHES - DISTINCT
+    want_rate = n_repeats / NUM_BATCHES
     failures = []
     if cached["retraces_after_warmup"] != 0:
         failures.append(
@@ -87,6 +90,12 @@ def ci_check(backend: str = "pallas_interpret") -> None:
         failures.append(
             f"{block_hits} block-cache hits, expected "
             f"{n_repeats} (a repeat rebuilt its layouts host-side)")
+    # the registry must carry the *rate* gauge too (dashboards/CI read
+    # reuse directly instead of recomputing it from raw counters)
+    if abs(block_rate - want_rate) > 1e-9:
+        failures.append(
+            f"loader_cache_hit_rate gauge {block_rate:.3f} != expected "
+            f"{want_rate:.3f} for {n_repeats}/{NUM_BATCHES} repeats")
     if failures:
         for f in failures:
             print(f"[serve_cached --ci] FAIL: {f}", file=sys.stderr)
@@ -94,7 +103,7 @@ def ci_check(backend: str = "pallas_interpret") -> None:
     print(f"[serve_cached --ci] OK: {traces} traces for "
           f"{NUM_BATCHES} batches ({DISTINCT} distinct), 0 retraces after "
           f"warmup, {block_hits}/{n_repeats} repeats served "
-          f"from the block cache")
+          f"from the block cache (hit rate {block_rate:.2f})")
 
 
 def main(argv=None):

@@ -178,9 +178,18 @@ class BlockExecutor(_CachedExecutor):
         return self._call(list(params), list(gts), list(kls),
                           list(dst_locals), seed_perm, feats)
 
-    def run_minibatch(self, params, mb, global_feats) -> jnp.ndarray:
-        """Convenience entry over a ``sampling.MiniBatch``."""
-        feats = {"feature": global_feats[mb.input_ids]}
+    def run_minibatch(self, params, mb, global_feats=None, *,
+                      feats=None) -> jnp.ndarray:
+        """Convenience entry over a ``sampling.MiniBatch``.
+
+        Input-feature precedence: an explicit ``feats`` pytree, then the
+        loader-attached ``mb.feats`` (pre-gathered by a tiered feature
+        store inside the prefetch overlap), then an on-device gather from
+        ``global_feats``. The chosen buffers are donated."""
+        if feats is None:
+            feats = getattr(mb, "feats", None)
+        if feats is None:
+            feats = {"feature": global_feats[mb.input_ids]}
         return self(params, mb.tensors, mb.layouts, mb.dst_locals,
                     mb.seed_perm, feats)
 

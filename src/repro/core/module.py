@@ -167,14 +167,20 @@ class HectorStack:
         return h
 
     def apply_blocks(self, params: Sequence[Dict[str, jnp.ndarray]],
-                     mb, global_feats: jnp.ndarray,
-                     compiled: Optional[bool] = None) -> jnp.ndarray:
+                     mb, global_feats: Optional[jnp.ndarray] = None,
+                     compiled: Optional[bool] = None,
+                     feats: Optional[Dict[str, jnp.ndarray]] = None
+                     ) -> jnp.ndarray:
         """Sampled forward over a ``MiniBatch``; returns [len(seeds), out].
 
         ``compiled=True`` runs the whole block sequence through the jitted
         ``BlockExecutor`` (cache-hit on repeated bucketed shapes);
         ``compiled=False`` is the op-by-op eager loop for debugging. The
         default follows the stack's ``jit`` flag.
+
+        Input features come from ``feats`` (an explicit pre-gathered
+        pytree), else ``mb.feats`` (attached by a feature-store-wired
+        loader), else an on-device gather from ``global_feats``.
         """
         if compiled is None:
             compiled = self.jit
@@ -185,8 +191,11 @@ class HectorStack:
             )
         if compiled:
             return self.block_executor.run_minibatch(
-                list(params), mb, global_feats)
-        feats = {"feature": global_feats[mb.input_ids]}
+                list(params), mb, global_feats, feats=feats)
+        if feats is None:
+            feats = getattr(mb, "feats", None)
+        if feats is None:
+            feats = {"feature": global_feats[mb.input_ids]}
         return codegen.execute_block_sequence(
             self.plans, list(params), mb.tensors, mb.layouts, mb.dst_locals,
             mb.seed_perm, feats, backend=self.backend,

@@ -1,0 +1,36 @@
+"""``repro.feats`` — tiered node-feature storage (see ``store.py``).
+
+The one factory every layer uses is ``make_feature_store``; consumers
+duck-type against ``FeatureStore`` (``gather`` / ``host_rows`` /
+``full_table`` / ``device_bytes``). ``as_feature_source`` normalizes the
+"raw array or store" argument the engine/trainer surfaces accept.
+"""
+from repro.feats.store import (CachedFeatureStore,      # noqa: F401
+                               DeviceFeatureStore, FeatureStore,
+                               HostFeatureStore, make_feature_store,
+                               split_budget)
+
+__all__ = [
+    "FeatureStore", "DeviceFeatureStore", "HostFeatureStore",
+    "CachedFeatureStore", "make_feature_store", "split_budget",
+    "is_feature_store", "gather_input",
+]
+
+
+def is_feature_store(obj) -> bool:
+    """Duck-typed store check (anything exposing the gather protocol)."""
+    return hasattr(obj, "gather") and hasattr(obj, "host_rows")
+
+
+def gather_input(feats_or_store, mb):
+    """The one rule for per-batch input features: a loader-attached
+    pre-gathered pytree wins (the prefetch overlap already paid for it),
+    else a store gathers the block's input rows, else the raw global
+    array is indexed on device (the pre-tiering behavior)."""
+    pre = getattr(mb, "feats", None)
+    if pre is not None:
+        return pre
+    if is_feature_store(feats_or_store):
+        return feats_or_store.gather(mb.input_ids, step=mb.step)
+    import jax.numpy as jnp
+    return {"feature": jnp.asarray(feats_or_store)[mb.input_ids]}

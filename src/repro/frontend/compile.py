@@ -87,10 +87,13 @@ class CompiledRGNN:
         per-seed cross-entropy -> backward -> optimizer update) behind the
         signature compile cache. ``labels`` must align with the requested
         seed order (``mb.seq.slice_labels``); returns
-        ``(new_state, {"loss", "accuracy"})``."""
+        ``(new_state, {"loss", "accuracy"})``. ``global_feats`` may be the
+        raw table or a ``repro.feats`` store (loader-attached ``mb.feats``
+        take precedence either way)."""
+        from repro.feats import gather_input
         exec_ = self._train_executor()
-        feats = {"feature": jnp.asarray(global_feats)[mb.input_ids]}
-        return exec_.grad_and_update(state, mb, jnp.asarray(labels), feats)
+        return exec_.grad_and_update(state, mb, jnp.asarray(labels),
+                                     gather_input(global_feats, mb))
 
     # -- observability ---------------------------------------------------
     def profile(self, params, mb, global_feats, *, warmup: int = 1,
@@ -147,6 +150,8 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
     sampler: str = "host",
     dp: int = 1,
     partitions: Optional[int] = None,
+    feature_store: str = "device",
+    feature_budget: Optional[int] = None,
     tune: str = "off",
     tune_cache: Optional[str] = None,
     tune_full_graph: bool = True,
@@ -169,6 +174,15 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
     (same fanout every hop), a per-layer sequence, or ``-1`` for full
     neighborhoods. ``tune`` in {"off", "cached", "full"} runs the
     autotuner exactly as the drivers' ``--tune`` flag does.
+
+    ``feature_store`` / ``feature_budget``: tiered feature storage
+    (``repro.feats``) — "device" keeps the full node-feature table
+    device-resident, "host" keeps it host-resident and ships only sampled
+    rows, "cached" adds a fixed-budget device hot-row cache
+    (``feature_budget`` rows, default table/4). Build the store with
+    ``compiled.make_feature_store(feats)`` and hand it to ``make_loader``
+    / ``train_step`` / ``apply_blocks`` wherever a raw table was accepted;
+    predictions are bitwise identical across the three tiers.
 
     ``dp`` / ``partitions``: data-parallel execution (``repro.dist``) —
     the graph is edge-cut into ``partitions`` shards (default one per
@@ -209,6 +223,7 @@ def compile(  # noqa: A001 - deliberate: the hector.compile() front door
             classes=classes, fanouts=sample, backend=backend, tile=tile,
             node_block=node_block, bucket=bucket, activation=activation,
             seed=seed, sampler=sampler, dp=dp, partitions=partitions,
+            feature_store=feature_store, feature_budget=feature_budget,
             tune=tune, tune_cache=tune_cache,
             tune_full_graph=tune_full_graph)
     return CompiledRGNN(RGNNEngine(graph, cfg, log=log), opt=opt)

@@ -54,6 +54,9 @@ def serve(
     sampler: str = "host",
     dp: int = 1,
     partitions=None,
+    feature_store: str = "device",
+    feature_budget=None,
+    skew=None,
     prefetch_depth: int = 2,
     cache_blocks: int = 0,
     cache_layouts: int = 0,
@@ -99,7 +102,8 @@ def serve(
         return _serve_scoped(
             sc, model, dataset, scale, layers, dim, hidden, classes,
             fanouts, batch_size, num_batches, backend, tile, node_block,
-            bucket, seed, sampler, dp, partitions, prefetch_depth,
+            bucket, seed, sampler, dp, partitions, feature_store,
+            feature_budget, skew, prefetch_depth,
             cache_blocks, cache_layouts, repeat_after, compiled,
             warmup_batches, tune, tune_cache, trace_out, metrics_out,
             profile, log)
@@ -108,7 +112,8 @@ def serve(
 def _serve_scoped(
     sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
     batch_size, num_batches, backend, tile, node_block, bucket, seed,
-    sampler, dp, partitions, prefetch_depth, cache_blocks, cache_layouts,
+    sampler, dp, partitions, feature_store, feature_budget, skew,
+    prefetch_depth, cache_blocks, cache_layouts,
     repeat_after, compiled, warmup_batches, tune, tune_cache, trace_out,
     metrics_out, profile, log,
 ):
@@ -116,7 +121,9 @@ def _serve_scoped(
     t0 = time.perf_counter()
     graph = table3_graph(dataset, scale=scale, seed=seed)
     rng = np.random.default_rng(seed)
-    feats = jnp.asarray(rng.normal(size=(graph.num_nodes, dim)), jnp.float32)
+    # host-side table: the chosen feature store decides what (if anything)
+    # becomes device-resident
+    feats = rng.normal(size=(graph.num_nodes, dim)).astype(np.float32)
     t_graph = time.perf_counter() - t0
 
     # the unified front door: program -> plans -> compiled stack -> sampler
@@ -125,19 +132,33 @@ def _serve_scoped(
         model, graph, layers=layers, dim=dim, hidden=hidden,
         classes=classes, sample=fanouts, backend=backend, tile=tile,
         node_block=node_block, bucket=bucket, seed=seed, sampler=sampler,
-        dp=dp, partitions=partitions, tune=tune, tune_cache=tune_cache,
+        dp=dp, partitions=partitions, feature_store=feature_store,
+        feature_budget=feature_budget, tune=tune, tune_cache=tune_cache,
         tune_full_graph=False, log=log)
     fanouts = engine.cfg.fanouts
     log(f"[serve_rgnn] {model} on {dataset} (scale {scale}): "
         f"{graph.num_nodes} nodes, {graph.num_edges} edges, "
         f"{graph.num_etypes} etypes; fanouts={fanouts} "
-        f"sampler={sampler} (graph build {t_graph:.2f}s)")
+        f"sampler={sampler} feature_store={feature_store}"
+        + (f" skew={skew}" if skew else "")
+        + f" (graph build {t_graph:.2f}s)")
     params = engine.init(jax.random.key(seed))
 
+    stream = SeedStream(graph.num_nodes, batch_size, seed=seed,
+                        num_distinct=repeat_after, zipf_alpha=skew)
+    # the feature store; for the cached tier the per-ntype slot split is a
+    # measured decision probed on this exact traffic (tune.feature_budget)
+    store = engine.make_feature_store(feats, seed_source=stream)
+    if feature_store == "cached":
+        log(f"[serve_rgnn] feature cache: {store.capacity} device rows "
+            f"({store.device_bytes() / 1e6:.2f} MB vs full table "
+            f"{store.table_bytes / 1e6:.2f} MB), per-ntype slots "
+            f"{store.slot_ptr.tolist()}")
+
     if engine.cfg.distributed:
-        return _serve_dist(engine, graph, feats, params, batch_size,
+        return _serve_dist(engine, graph, store, params, batch_size,
                            num_batches, repeat_after, warmup_batches, seed,
-                           sc, metrics_out, log)
+                           skew, sc, metrics_out, log)
 
     if tune != "off":
         # block-scale tuning on one representative (bucketed) mini-batch,
@@ -148,7 +169,7 @@ def _serve_scoped(
         tl = engine.make_loader(lambda step: warm_seeds, num_batches=1,
                                 depth=1)
         try:
-            engine.tune_minibatch(params, next(tl), feats)
+            engine.tune_minibatch(params, next(tl), jnp.asarray(feats))
         finally:
             tl.close()
         ts = engine.tuner_stats
@@ -157,10 +178,10 @@ def _serve_scoped(
             f"(tile {engine.tile}, node_block {engine.node_block})")
 
     loader = engine.make_loader(
-        SeedStream(graph.num_nodes, batch_size, seed=seed,
-                   num_distinct=repeat_after),
+        stream,
         num_batches=num_batches, depth=prefetch_depth,
         cache_blocks=cache_blocks, cache_layouts=cache_layouts,
+        feature_store=store,
     )
 
     executor = engine.block_executor
@@ -193,8 +214,9 @@ def _serve_scoped(
                     sampler_syncs_at_warmup = dev_sampler.count_syncs
             t0 = time.perf_counter()
             # engine.apply_blocks opens the "execute" span (with a device
-            # sync inside it when tracing is on)
-            logits = engine.apply_blocks(params, mb, feats,
+            # sync inside it when tracing is on); the loader attached this
+            # batch's features (mb.feats) through the store
+            logits = engine.apply_blocks(params, mb, store,
                                          compiled=compiled)
             logits.block_until_ready()
             t_fwd = time.perf_counter() - t0
@@ -273,6 +295,15 @@ def _serve_scoped(
         stats[f"{name}_hits"] = cs["hits"]
         stats[f"{name}_misses"] = cs["misses"]
         stats[f"{name}_hit_rate"] = cs["hit_rate"]
+    for k, v in store.stats().items():
+        stats[f"feature_{k}"] = v
+    if feature_store != "device":
+        log(f"[serve_rgnn] feature store ({feature_store}): "
+            f"{store.host_gathers} host gathers, "
+            f"{store.bytes_moved / 1e6:.2f} MB moved"
+            + (f", hit rate {store.hit_rate:.0%} "
+               f"({store.evictions} evictions, {store.overflows} overflows)"
+               if feature_store == "cached" else ""))
     log(f"[serve_rgnn] served {n} batches x {batch_size} seeds: "
         f"latency p50 {stats['latency_ms_p50']:.1f} ms / "
         f"p95 {stats['latency_ms_p95']:.1f} ms / "
@@ -311,20 +342,25 @@ def _serve_scoped(
     return stats
 
 
-def _serve_dist(engine, graph, feats, params, batch_size, num_batches,
-                repeat_after, warmup_batches, seed, sc, metrics_out, log):
+def _serve_dist(engine, graph, store, params, batch_size, num_batches,
+                repeat_after, warmup_batches, seed, skew, sc, metrics_out,
+                log):
     """Multi-shard serving loop: route each request batch to its owner
     shards, sample per shard, run the one compiled ``shard_map`` step,
     report request-order predictions. Stats keys mirror the single-box
-    loop so benchmarks/tests compare the two paths directly."""
+    loop so benchmarks/tests compare the two paths directly.
+
+    The per-owner feature slabs are read through the feature store
+    (``host_rows``), so with a host/cached store the full table never
+    becomes device-resident — each shard holds only its owned rows."""
     cfg = engine.cfg
     log(f"[serve_rgnn] distributed: {cfg.num_partitions} shards over "
         f"{cfg.dp} devices\n" + engine.partition.describe())
     batcher = engine.dist_batcher
     serve_ex = engine.dist_serve_executor()
-    own_feats = engine.shard_features(feats)
+    own_feats = engine.shard_features(store)
     stream = SeedStream(graph.num_nodes, batch_size, seed=seed,
-                        num_distinct=repeat_after)
+                        num_distinct=repeat_after, zipf_alpha=skew)
 
     lat, waits, computes, preds = [], [], [], None
     traces_at_warmup = None
@@ -378,6 +414,8 @@ def _serve_dist(engine, graph, feats, params, batch_size, num_batches,
     }
     for k, v in batcher.stats().items():
         stats[f"batcher_{k}"] = v
+    for k, v in store.stats().items():
+        stats[f"feature_{k}"] = v
     log(f"[serve_rgnn] served {num_batches} batches x {batch_size} seeds "
         f"on {cfg.num_partitions} shards / {cfg.dp} devices: "
         f"latency p50 {stats['latency_ms_p50']:.1f} ms "
@@ -429,6 +467,23 @@ def main(argv=None):
                     help="graph shard count (default: one per --dp device; "
                          "a multiple of --dp folds extra shards onto "
                          "devices with bit-identical results)")
+    ap.add_argument("--feature-store", default="device",
+                    choices=["device", "host", "cached"],
+                    help="where the node-feature table lives: 'device' = "
+                         "full table device-resident; 'host' = host-"
+                         "resident per-ntype tables, only sampled rows "
+                         "shipped (inside the prefetch overlap); 'cached' "
+                         "= host tier + fixed-budget device hot-row cache. "
+                         "Predictions are bitwise identical across all "
+                         "three")
+    ap.add_argument("--feature-budget", type=int, default=None,
+                    help="device hot-row count for --feature-store cached "
+                         "(default: num_nodes / 4); per-ntype split is "
+                         "measured from probe traffic")
+    ap.add_argument("--skew", type=float, default=None, metavar="ALPHA",
+                    help="Zipf exponent for the seed stream (power-law "
+                         "traffic; popularity rank r drawn with p ~ "
+                         "(r+1)^-ALPHA). Default: uniform")
     ap.add_argument("--cache-blocks", type=int, default=0,
                     help="LRU capacity of the sampled-block cache keyed by "
                          "(seeds, fanout); 0 disables")
@@ -483,6 +538,8 @@ def main(argv=None):
         backend=args.backend, tile=args.tile, node_block=args.node_block,
         bucket=not args.no_bucket, seed=args.seed, sampler=args.sampler,
         dp=args.dp, partitions=args.partitions,
+        feature_store=args.feature_store,
+        feature_budget=args.feature_budget, skew=args.skew,
         cache_blocks=args.cache_blocks, cache_layouts=args.cache_layouts,
         repeat_after=args.repeat_after or None, compiled=not args.eager,
         tune=args.tune, tune_cache=args.tune_cache,

@@ -29,7 +29,7 @@ from repro import obs
 from repro.core.graph import (CPU_REDUCED_SCALES, synthetic_heterograph,
                               table3_graph)
 from repro.optim import AdamW, cosine_schedule
-from repro.sampling import EpochSeedStream
+from repro.sampling import EpochSeedStream, SeedStream
 from repro.train import (EngineConfig, MODEL_PROGRAMS, SampledTrainer,
                          parse_fanout)
 
@@ -55,13 +55,15 @@ def build_task(dataset: str, scale: float, cfg: EngineConfig, seed: int,
     else:
         graph = table3_graph(dataset, scale=scale, seed=seed)
     rng = np.random.default_rng(seed)
-    feats = jnp.asarray(rng.normal(size=(graph.num_nodes, cfg.dim)),
-                        jnp.float32)
+    # host-side table: the chosen feature store decides what (if anything)
+    # becomes device-resident
+    feats = rng.normal(size=(graph.num_nodes, cfg.dim)).astype(np.float32)
     # the unified front door (frontend/compile.py) builds program -> plans
     # -> compiled stack -> sampler (+ tuner) from the prebuilt config
     engine = hector.compile(None, graph, config=cfg)
     teacher = engine.init(jax.random.key(seed + 1))
-    labels = np.asarray(jnp.argmax(engine.forward_full(teacher, feats), -1))
+    labels = np.asarray(jnp.argmax(
+        engine.forward_full(teacher, jnp.asarray(feats)), -1))
     perm = rng.permutation(graph.num_nodes)
     n_val = int(graph.num_nodes * val_frac)
     val_ids = np.sort(perm[:n_val]).astype(np.int32)
@@ -91,6 +93,9 @@ def train(
     sampler: str = "host",
     dp: int = 1,
     partitions=None,
+    feature_store: str = "device",
+    feature_budget=None,
+    skew=None,
     val_frac: float = 0.2,
     ckpt_dir=None,
     ckpt_every: int = 0,
@@ -129,7 +134,8 @@ def train(
             sc, model, dataset, scale, layers, dim, hidden, classes,
             fanouts, batch_size, epochs, lr, weight_decay, warmup_steps,
             backend, tile, node_block, bucket, seed, sampler, dp,
-            partitions, val_frac, ckpt_dir, ckpt_every, resume,
+            partitions, feature_store, feature_budget, skew, val_frac,
+            ckpt_dir, ckpt_every, resume,
             eval_every_epochs, parity, parity_tol, tune, tune_cache,
             trace_out, metrics_out, profile, log)
 
@@ -137,7 +143,8 @@ def train(
 def _train_scoped(
     sc, model, dataset, scale, layers, dim, hidden, classes, fanouts,
     batch_size, epochs, lr, weight_decay, warmup_steps, backend, tile,
-    node_block, bucket, seed, sampler, dp, partitions, val_frac, ckpt_dir,
+    node_block, bucket, seed, sampler, dp, partitions, feature_store,
+    feature_budget, skew, val_frac, ckpt_dir,
     ckpt_every, resume, eval_every_epochs, parity, parity_tol, tune,
     tune_cache, trace_out, metrics_out, profile, log,
 ):
@@ -145,30 +152,47 @@ def _train_scoped(
                        classes=classes, fanouts=fanouts, backend=backend,
                        tile=tile, node_block=node_block, bucket=bucket,
                        seed=seed, sampler=sampler, dp=dp,
-                       partitions=partitions, tune=tune,
+                       partitions=partitions, feature_store=feature_store,
+                       feature_budget=feature_budget, tune=tune,
                        tune_cache=tune_cache)
     engine, feats, labels, train_ids, val_ids = build_task(
         dataset, scale, cfg, seed, val_frac)
     log(f"[train_rgnn] {model} on {dataset} (scale {scale}): "
         f"{engine.graph.num_nodes} nodes, {engine.graph.num_edges} edges, "
         f"{engine.graph.num_etypes} etypes; fanouts={cfg.fanouts}, "
-        f"sampler={sampler}, "
-        f"{len(train_ids)} train / {len(val_ids)} val nodes")
+        f"sampler={sampler}, feature_store={feature_store}"
+        + (f" skew={skew}" if skew else "")
+        + f", {len(train_ids)} train / {len(val_ids)} val nodes")
 
-    # size the LR schedule off the same stream the trainer will iterate:
-    # batches_per_epoch depends only on (ids, batch_size), both passed
-    # verbatim to trainer.train below (the stream seed never affects sizing)
-    bpe = EpochSeedStream(train_ids, batch_size).batches_per_epoch
+    # size the LR schedule off the same stream the trainer will iterate
+    # (trainer.train rebuilds it from (ids, batch_size, skew), all passed
+    # verbatim below; the stream seed never affects sizing)
+    if skew is not None:
+        bpe = max(1, len(train_ids) // batch_size)
+    else:
+        bpe = EpochSeedStream(train_ids, batch_size).batches_per_epoch
     total_steps = epochs * bpe
     opt = AdamW(learning_rate=cosine_schedule(lr, warmup_steps, total_steps),
                 weight_decay=weight_decay)
 
+    # the feature store; for the cached tier the per-ntype slot split is a
+    # measured decision probed on the same traffic the trainer will iterate
+    probe = (SeedStream(ids=train_ids, batch_size=batch_size, seed=seed,
+                        zipf_alpha=skew) if skew is not None
+             else EpochSeedStream(train_ids, batch_size, seed=seed))
+    store = engine.make_feature_store(feats, seed_source=probe)
+    if feature_store == "cached":
+        log(f"[train_rgnn] feature cache: {store.capacity} device rows "
+            f"({store.device_bytes() / 1e6:.2f} MB vs full table "
+            f"{store.table_bytes / 1e6:.2f} MB), per-ntype slots "
+            f"{store.slot_ptr.tolist()}")
+
     if cfg.distributed:
-        return _train_dist(engine, feats, labels, train_ids, val_ids, opt,
+        return _train_dist(engine, store, labels, train_ids, val_ids, opt,
                            epochs, batch_size, bpe, seed, parity, profile,
                            ckpt_dir, resume, sc, metrics_out, log)
 
-    trainer = SampledTrainer(engine, feats, labels, train_ids, val_ids,
+    trainer = SampledTrainer(engine, store, labels, train_ids, val_ids,
                              opt=opt, ckpt_dir=ckpt_dir, log=log)
     state = trainer.init_state(engine.init(jax.random.key(seed)))
 
@@ -181,7 +205,7 @@ def _train_scoped(
         tl = engine.make_loader(lambda step: warm_seeds, num_batches=1,
                                 depth=1)
         try:
-            engine.tune_minibatch(state.params, next(tl), feats)
+            engine.tune_minibatch(state.params, next(tl), jnp.asarray(feats))
         finally:
             tl.close()
         ts = engine.tuner_stats
@@ -199,7 +223,7 @@ def _train_scoped(
     state, stats = trainer.train(
         state, epochs=epochs, batch_size=batch_size, start_step=start_step,
         ckpt_every=ckpt_every, eval_every_epochs=eval_every_epochs,
-        log_every=max(1, bpe // 2))
+        log_every=max(1, bpe // 2), skew=skew)
 
     for k, v in engine.tuner_stats.items():
         stats[f"tune_{k}"] = v
@@ -274,7 +298,7 @@ def _train_scoped(
         ph = prof_mod.profile_train_step(
             engine.plans, trainer.opt, state, mb,
             mb.seq.slice_labels(labels),
-            {"feature": feats[mb.input_ids]},
+            {"feature": jnp.asarray(feats)[mb.input_ids]},
             backend=engine.cfg.backend, activation=engine.cfg.activation,
             decisions=engine.decisions, warmup=1, iters=5)
         log(f"[train_rgnn] step attribution: "
@@ -338,6 +362,10 @@ def _train_dist(engine, feats, labels, train_ids, val_ids, opt, epochs,
         f"acc {final_train['accuracy']:.2%}"
         + (f" | val loss {final_val['loss']:.4f} "
            f"acc {final_val['accuracy']:.2%}" if final_val else ""))
+    from repro.feats import is_feature_store
+    if is_feature_store(feats):
+        for k, v in feats.stats().items():
+            stats[f"feature_{k}"] = v
     if sc is not None:
         stats["metrics"] = sc.registry.snapshot()
         if metrics_out:
@@ -381,6 +409,21 @@ def main(argv=None):
                     help="graph shard count (default: one per --dp device; "
                          "a multiple of --dp folds extra shards onto "
                          "devices with bit-identical results)")
+    ap.add_argument("--feature-store", default="device",
+                    choices=["device", "host", "cached"],
+                    help="where the node-feature table lives: 'device' = "
+                         "full table device-resident (baseline); 'host' = "
+                         "host tables, per-batch input rows gathered inside "
+                         "the prefetch overlap; 'cached' = host tables "
+                         "fronted by a fixed-budget device hot-row cache")
+    ap.add_argument("--feature-budget", type=int, default=None,
+                    help="device hot-row count for --feature-store cached "
+                         "(default: num_nodes // 4), split per ntype by "
+                         "measured traffic")
+    ap.add_argument("--skew", type=float, default=None, metavar="ALPHA",
+                    help="Zipf-skew the seed stream (rank probability "
+                         "(r+1)^-ALPHA, with replacement) — the power-law "
+                         "traffic model for feature-cache studies")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--val-frac", type=float, default=0.2)
     ap.add_argument("--ckpt-dir", default=None)
@@ -432,7 +475,10 @@ def main(argv=None):
         weight_decay=args.weight_decay, backend=args.backend,
         tile=args.tile, node_block=args.node_block,
         bucket=not args.no_bucket, seed=args.seed, sampler=args.sampler,
-        dp=args.dp, partitions=args.partitions, val_frac=args.val_frac,
+        dp=args.dp, partitions=args.partitions,
+        feature_store=args.feature_store,
+        feature_budget=args.feature_budget, skew=args.skew,
+        val_frac=args.val_frac,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         resume=args.resume, eval_every_epochs=args.eval_every_epochs,
         parity=args.parity, parity_tol=args.parity_tol,

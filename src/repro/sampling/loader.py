@@ -76,11 +76,19 @@ class LRUCache:
             self.misses += 1
             obs.metrics().counter("loader_cache_misses",
                                   cache=self.name).inc()
+            self._mirror_rate()
             return None
         self._d[key] = v          # re-insert: most recently used
         self.hits += 1
         obs.metrics().counter("loader_cache_hits", cache=self.name).inc()
+        self._mirror_rate()
         return v
+
+    def _mirror_rate(self) -> None:
+        # registry snapshots carry the *rate*, not just raw counters, so CI
+        # gates and dashboards read reuse directly (ISSUE 9 satellite)
+        obs.metrics().gauge("loader_cache_hit_rate",
+                            cache=self.name).set(self.hit_rate)
 
     def put(self, key, value) -> None:
         self._d.pop(key, None)
@@ -132,21 +140,69 @@ class SeedStream:
     ``step % num_distinct``, so the stream cycles over a fixed set of seed
     batches — the workload shape that makes the sampled-block and layout
     caches (and the compiled-executor cache) pay off.
+
+    ``zipf_alpha`` draws seeds from a Zipf distribution over the node
+    population instead of uniformly: node popularity rank ``r`` (0-based)
+    has probability proportional to ``(r + 1) ** -alpha``, and a
+    seed-keyed permutation maps ranks onto ids so the hot set is spread
+    across the id space (not just the lowest ids). This is the realistic
+    skewed-traffic model the feature-cache benchmarks run against; with
+    ``alpha`` ~1.0-1.5 a small device hot-row cache absorbs most of the
+    feature traffic. ``batch(step)`` stays a pure function of
+    ``(seed, step)`` — the rank table is built once from the seed.
+
+    ``ids`` restricts the population to an explicit id set (e.g. a train
+    split) instead of ``[0, num_nodes)``.
     """
 
-    def __init__(self, num_nodes: int, batch_size: int, seed: int = 0,
-                 num_distinct: Optional[int] = None):
-        self.num_nodes = num_nodes
+    def __init__(self, num_nodes: Optional[int] = None,
+                 batch_size: int = 32, seed: int = 0,
+                 num_distinct: Optional[int] = None,
+                 zipf_alpha: Optional[float] = None,
+                 ids: Optional[np.ndarray] = None):
+        if ids is not None:
+            self.ids = np.asarray(ids, dtype=np.int32)
+            if self.ids.ndim != 1 or self.ids.size == 0:
+                raise ValueError("ids must be a non-empty 1-D int array")
+            self.num_nodes = int(self.ids.size)
+        else:
+            if num_nodes is None:
+                raise ValueError("need num_nodes or ids")
+            self.ids = None
+            self.num_nodes = int(num_nodes)
         self.batch_size = batch_size
         self.seed = seed
         self.num_distinct = num_distinct
+        self.zipf_alpha = zipf_alpha
+        self._cdf = self._rank2idx = None
+        if zipf_alpha is not None:
+            if zipf_alpha <= 0:
+                raise ValueError("zipf_alpha must be positive")
+            p = np.arange(1, self.num_nodes + 1,
+                          dtype=np.float64) ** -float(zipf_alpha)
+            self._cdf = np.cumsum(p / p.sum())
+            # popularity rank -> population index, keyed off the stream
+            # seed so the hot rows aren't simply the lowest ids
+            self._rank2idx = np.random.default_rng(
+                (self.seed, 0x5eed)).permutation(
+                self.num_nodes).astype(np.int64)
 
     def batch(self, step: int) -> np.ndarray:
         if self.num_distinct:
             step = step % self.num_distinct
         rng = np.random.default_rng((self.seed, step))
-        return rng.integers(0, self.num_nodes, size=self.batch_size,
-                            dtype=np.int32)
+        if self._cdf is None:
+            # identical draws to the pre-skew stream (dtype is part of the
+            # Generator contract — don't change it)
+            draw = rng.integers(0, self.num_nodes, size=self.batch_size,
+                                dtype=np.int32)
+        else:
+            # inverse-CDF sampling of popularity ranks, mapped to indices
+            u = rng.random(self.batch_size)
+            ranks = np.searchsorted(self._cdf, u, side="right")
+            draw = self._rank2idx[np.minimum(ranks, self.num_nodes - 1)]
+        out = draw if self.ids is None else self.ids[draw]
+        return out.astype(np.int32)
 
 
 class EpochSeedStream:
@@ -215,6 +271,13 @@ class MiniBatch:
     input_ids: jnp.ndarray          # [n_input] global IDs feeding hop 0
     dst_locals: List[jnp.ndarray]   # per hop: local rows of the out frontier
     seed_perm: jnp.ndarray          # final-frontier row of each seed
+    # pre-gathered input features for this batch (a ``{"feature": [n, d]}``
+    # pytree), attached by a loader wired to a ``repro.feats`` store: the
+    # gather for batch k+1 is dispatched while batch k executes, so the
+    # host->device row transfer rides the prefetch overlap. ``None`` means
+    # the executor indexes the global table itself (pre-tiering behavior).
+    # Executors DONATE these buffers — they are valid for one consumption.
+    feats: Optional[dict] = None
 
     @property
     def num_hops(self) -> int:
@@ -338,8 +401,13 @@ class MiniBatchLoader:
         cache_blocks: int = 0,
         cache_layouts: int = 0,
         partition=None,
+        feature_store=None,
     ):
         self.sampler = sampler
+        # a repro.feats store: the producer gathers each batch's input rows
+        # and attaches them as mb.feats (single-writer contract — only this
+        # loader's producer calls gather on it)
+        self.feature_store = feature_store
         self._seeds_for = (seed_source.batch
                            if hasattr(seed_source, "batch") else seed_source)
         # training streams expose epoch_of(step); serving streams don't
@@ -390,9 +458,31 @@ class MiniBatchLoader:
 
     def build_stats(self) -> dict:
         """Which pipeline built the non-cached batches (the ``sample_native``
-        CI gate asserts ``host_builds == 0`` in device mode)."""
-        return {"mode": self.mode, "host_builds": self.host_builds,
-                "device_builds": self.device_builds}
+        CI gate asserts ``host_builds == 0`` in device mode), plus the
+        per-cache hit *rates* (not just raw counters)."""
+        out = {"mode": self.mode, "host_builds": self.host_builds,
+               "device_builds": self.device_builds}
+        if self.block_cache is not None:
+            out["block_cache_hit_rate"] = self.block_cache.hit_rate
+        if self.layout_cache is not None:
+            out["layout_cache_hit_rate"] = self.layout_cache.hit_rate
+        return out
+
+    def _attach_feats(self, mb: MiniBatch, step: int) -> MiniBatch:
+        """Gather this batch's input-feature rows through the store and
+        attach them. Runs on the producer (thread or async-dispatch), so
+        the host gather + transfer for batch k+1 overlaps batch k's
+        compute. Cached batches are stored *without* feats: executors
+        donate the feature buffers and the cache state advances every
+        batch, so each occurrence re-gathers (hot rows stay device-side
+        in the cached store, making the re-gather cheap)."""
+        if self.feature_store is None:
+            return mb
+        # stores normalize ids themselves: the device tier keeps them on
+        # device (no sync); host/cached tiers pull them to host (the row
+        # addresses are needed there — the unavoidable cost of the tier)
+        feats = self.feature_store.gather(mb.input_ids, step=step)
+        return dataclasses.replace(mb, feats=feats)
 
     def _cache_key(self, seeds: np.ndarray, epoch) -> tuple:
         return (seeds.tobytes(), self._fanout_key, self.tile,
@@ -406,7 +496,8 @@ class MiniBatchLoader:
             key = self._cache_key(seeds, epoch)
             mb = self.block_cache.get(key)
             if mb is not None:
-                return dataclasses.replace(mb, step=step)
+                return self._attach_feats(
+                    dataclasses.replace(mb, step=step), step)
         self.host_builds += 1
         with obs.span("sample", step=step):
             seq = self.sampler.sample(seeds, batch_index=step, epoch=epoch)
@@ -417,8 +508,8 @@ class MiniBatchLoader:
                                  layout_cache=self.layout_cache,
                                  layout_scope=self._partition_key)
         if self.block_cache is not None:
-            self.block_cache.put(key, mb)
-        return mb
+            self.block_cache.put(key, mb)   # cached without feats
+        return self._attach_feats(mb, step)
 
     def _build_device(self, step: int) -> MiniBatch:
         seeds = self._seeds_for(step)
@@ -428,13 +519,14 @@ class MiniBatchLoader:
             key = self._cache_key(seeds, epoch)
             mb = self.block_cache.get(key)
             if mb is not None:
-                return dataclasses.replace(mb, step=step)
+                return self._attach_feats(
+                    dataclasses.replace(mb, step=step), step)
         self.device_builds += 1
         mb = self.sampler.sample_minibatch(seeds, batch_index=step,
                                            epoch=epoch, step=step)
         if self.block_cache is not None:
-            self.block_cache.put(key, mb)
-        return mb
+            self.block_cache.put(key, mb)   # cached without feats
+        return self._attach_feats(mb, step)
 
     def _pump(self) -> None:
         """Dispatch device builds until the prefetch window is full: JAX

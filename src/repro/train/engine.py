@@ -81,6 +81,14 @@ class EngineConfig:
     # (elastic shrink) with bit-identical results for any dp | partitions.
     dp: int = 1
     partitions: Optional[int] = None
+    # where the node-feature table lives (repro.feats): "device" keeps the
+    # full table device-resident (pre-tiering behavior), "host" keeps it in
+    # per-ntype host arrays and ships only sampled rows, "cached" fronts the
+    # host tier with a fixed-budget device hot-row cache. All three produce
+    # bitwise-identical predictions/losses.
+    feature_store: str = "device"
+    # device hot-row count for feature_store="cached" (default: table/4)
+    feature_budget: Optional[int] = None
     tune: str = "off"                    # off | cached | full
     tune_cache: Optional[str] = None     # persistent decision cache path
     # False for block-path-only callers (serving): keeps the materialization
@@ -101,6 +109,9 @@ class EngineConfig:
             raise ValueError(f"tune={self.tune!r}; pick off/cached/full")
         if self.sampler not in ("host", "device"):
             raise ValueError(f"sampler={self.sampler!r}; pick host/device")
+        if self.feature_store not in ("device", "host", "cached"):
+            raise ValueError(f"feature_store={self.feature_store!r}; "
+                             f"pick device/host/cached")
         self.fanouts = list(self.fanouts) if self.fanouts is not None \
             else [5] * self.layers
         if len(self.fanouts) != self.layers:
@@ -259,8 +270,23 @@ class RGNNEngine:
 
     def shard_features(self, feats) -> jnp.ndarray:
         """Per-owner resident feature slabs ``[P, n_own, d]`` (device-put
-        once; the compiled steps all-gather them for halo access)."""
+        once; the compiled steps all-gather them for halo access).
+
+        ``feats`` may be a raw ``[N, d]`` table or a ``repro.feats`` store:
+        with a store, each shard's slab is read through ``host_rows`` — the
+        full table is never materialized on device, so shards hold only
+        their owned rows (+ whatever the store keeps hot)."""
         self._require_dist()
+        from repro.feats import is_feature_store
+        if is_feature_store(feats):
+            part = self.partition
+            out = np.zeros((part.num_parts, part.max_owned, feats.dim),
+                           dtype=feats.dtype)
+            for p in range(part.num_parts):
+                lo, hi = int(part.bounds[p]), int(part.bounds[p + 1])
+                out[p, : hi - lo] = feats.host_rows(
+                    np.arange(lo, hi, dtype=np.int64))
+            return jnp.asarray(out)
         return jnp.asarray(self.partition.shard_features(np.asarray(feats)))
 
     def dist_serve_executor(self):
@@ -296,6 +322,32 @@ class RGNNEngine:
         return ex
 
     # ------------------------------------------------------------------
+    def make_feature_store(self, feats, *, seed_source=None,
+                           probe_batches: int = 4):
+        """Build the ``repro.feats`` store this config asks for
+        (``cfg.feature_store`` / ``cfg.feature_budget``).
+
+        For the cached tier, the per-ntype slot split is a *measured*
+        decision when ``seed_source`` is given: ``tune.feature_budget``
+        probes a few seed batches through the host sampler and splits the
+        budget by observed per-ntype input-row traffic instead of raw
+        populations (skewed hetero traffic rarely matches populations)."""
+        from repro.feats import make_feature_store
+        kind = self.cfg.feature_store
+        split = None
+        if kind == "cached" and seed_source is not None:
+            from repro.tune.feature_budget import measured_split
+            budget = self.cfg.feature_budget
+            if budget is None:
+                budget = max(1, self.graph.num_nodes // 4)
+            split, _report = measured_split(
+                self.graph, self.sampler, seed_source, budget,
+                probe_batches=probe_batches)
+        return make_feature_store(feats, self.graph, kind=kind,
+                                  budget=self.cfg.feature_budget,
+                                  split=split)
+
+    # ------------------------------------------------------------------
     def make_loader(
         self,
         seed_source: Union[object, Callable[[int], np.ndarray]],
@@ -305,6 +357,7 @@ class RGNNEngine:
         depth: int = 2,
         cache_blocks: int = 0,
         cache_layouts: int = 0,
+        feature_store=None,
     ) -> MiniBatchLoader:
         """A prefetching loader over this engine's sampler/layout config.
 
@@ -323,7 +376,7 @@ class RGNNEngine:
             tile=self.cfg.tile, node_block=self.cfg.node_block,
             bucket=self.cfg.bucket, depth=depth, start_step=start_step,
             num_batches=num_batches, cache_blocks=cache_blocks,
-            cache_layouts=cache_layouts,
+            cache_layouts=cache_layouts, feature_store=feature_store,
         )
 
     # ------------------------------------------------------------------
@@ -346,10 +399,16 @@ class RGNNEngine:
     # ------------------------------------------------------------------
     def forward_minibatch(self, params, mb, global_feats,
                           compiled: bool = True) -> jnp.ndarray:
-        """Sampled forward: per-seed outputs for a ``MiniBatch``."""
+        """Sampled forward: per-seed outputs for a ``MiniBatch``.
+
+        ``global_feats`` may be the raw device table *or* any
+        ``repro.feats`` store; loader-attached ``mb.feats`` win either
+        way (the prefetch overlap already paid for that gather)."""
+        from repro.feats import gather_input
         with obs.span("execute", step=mb.step) as sp:
-            out = self.stack.apply_blocks(params, mb, global_feats,
-                                          compiled=compiled)
+            out = self.stack.apply_blocks(
+                params, mb, compiled=compiled,
+                feats=gather_input(global_feats, mb))
             return sp.sync(out)
 
     def forward_full(self, params, feats: jnp.ndarray) -> jnp.ndarray:

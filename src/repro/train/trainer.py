@@ -32,7 +32,7 @@ from repro import obs
 from repro.checkpoint import Checkpointer
 from repro.core import executor
 from repro.optim import AdamW, TrainState
-from repro.sampling import EpochSeedStream, build_minibatch
+from repro.sampling import EpochSeedStream, SeedStream, build_minibatch
 from repro.train.engine import RGNNEngine
 
 
@@ -46,9 +46,14 @@ class FullGraphTrainer:
 
     def __init__(self, engine: RGNNEngine, feats, labels, train_ids,
                  *, opt: Optional[AdamW] = None, log=print):
+        from repro.feats import is_feature_store
         self.engine = engine
         self.opt = opt or AdamW(learning_rate=3e-3, weight_decay=0.01)
-        self.feats = jnp.asarray(feats)
+        # full-graph execution needs the whole table device-resident; a
+        # tiered store hands it over explicitly (this path defeats tiering
+        # by design — it exists for eval/parity, not steady-state training)
+        self.feats = (feats.full_table() if is_feature_store(feats)
+                      else jnp.asarray(feats))
         self.labels = np.asarray(labels)
         self.train_ids = np.asarray(train_ids, dtype=np.int32)
         self.log = log or _quiet
@@ -110,9 +115,14 @@ class SampledTrainer:
         prefetch_depth: int = 2,
         log=print,
     ):
+        from repro.feats import is_feature_store
         self.engine = engine
         self.opt = opt or AdamW(learning_rate=3e-3, weight_decay=0.01)
-        self.feats = jnp.asarray(feats)
+        # ``feats`` may be a raw [N, d] table or a repro.feats store; the
+        # sampled path only ever touches per-batch rows through it, so with
+        # a host/cached store the full table never becomes device-resident
+        # here (only the lazy full-graph evaluator materializes it)
+        self.feats = feats if is_feature_store(feats) else jnp.asarray(feats)
         self.labels = np.asarray(labels)
         self.train_ids = np.asarray(train_ids, dtype=np.int32)
         # an empty val split means "no validation", not a zero-row eval
@@ -125,10 +135,19 @@ class SampledTrainer:
         # shared with the hector.compile facade: same opt -> same compiled
         # step (engine.train_executor caches per optimizer instance)
         self.step_exec = engine.train_executor(self.opt)
-        # full-graph evaluator shares the optimizer (its update path is
-        # unused for eval) and the engine's plans/layouts
-        self.full = FullGraphTrainer(engine, feats, labels, train_ids,
-                                     opt=self.opt, log=log)
+        self._full = None
+
+    @property
+    def full(self) -> FullGraphTrainer:
+        """Full-graph evaluator, built lazily: it materializes the whole
+        feature table on device (via ``full_table`` for tiered stores), so
+        a pure sampled run with a host/cached store never pays that
+        footprint unless evaluation is actually requested."""
+        if self._full is None:
+            self._full = FullGraphTrainer(
+                self.engine, self.feats, self.labels, self.train_ids,
+                opt=self.opt, log=self.log)
+        return self._full
 
     # ------------------------------------------------------------------
     def init_state(self, params) -> TrainState:
@@ -155,15 +174,27 @@ class SampledTrainer:
         eval_every_epochs: int = 0,
         warmup_epochs: int = 1,
         log_every: int = 0,
+        skew: Optional[float] = None,
     ):
         """Run ``epochs`` of neighbor-sampled SGD; returns
         ``(state, stats)``. ``start_step`` (a global step, e.g. from
         ``resume``) may land mid-epoch — the stream replays the exact
-        remaining batches of that epoch."""
-        stream = EpochSeedStream(
-            self.train_ids, batch_size,
-            seed=self.engine.cfg.seed if stream_seed is None else stream_seed)
-        bpe = stream.batches_per_epoch
+        remaining batches of that epoch.
+
+        ``skew`` switches the seed stream to Zipf-skewed sampling *with*
+        replacement over the train ids (``SeedStream(zipf_alpha=)``) —
+        the power-law traffic model for cache studies. An "epoch" is then
+        nominal (``len(train_ids) // batch_size`` steps), and neighborhoods
+        still resample freshly each step (the sampler is keyed by the
+        global step)."""
+        sseed = self.engine.cfg.seed if stream_seed is None else stream_seed
+        if skew is not None:
+            stream = SeedStream(ids=self.train_ids, batch_size=batch_size,
+                                seed=sseed, zipf_alpha=skew)
+            bpe = max(1, len(self.train_ids) // stream.batch_size)
+        else:
+            stream = EpochSeedStream(self.train_ids, batch_size, seed=sseed)
+            bpe = stream.batches_per_epoch
         total_steps = epochs * bpe
         if start_step >= total_steps:
             raise ValueError(f"start_step {start_step} beyond "
@@ -174,10 +205,13 @@ class SampledTrainer:
         warmup_steps = start_step + min(warmup_epochs * bpe,
                                         total_steps - start_step)
 
+        from repro.feats import gather_input, is_feature_store
         loader = self.engine.make_loader(
             stream, start_step=start_step,
             num_batches=total_steps - start_step, depth=self.prefetch_depth,
-            cache_blocks=0, cache_layouts=self.cache_layouts)
+            cache_blocks=0, cache_layouts=self.cache_layouts,
+            feature_store=self.feats if is_feature_store(self.feats)
+            else None)
 
         ex = self.step_exec
         losses: List[float] = []
@@ -192,7 +226,9 @@ class SampledTrainer:
                 if traces_at_warmup is None and step >= warmup_steps:
                     traces_at_warmup = ex.trace_count
                 labels_b = jnp.asarray(mb.seq.slice_labels(self.labels))
-                feats_b = {"feature": self.feats[mb.input_ids]}
+                # loader-attached mb.feats (tiered store, gathered inside
+                # the prefetch overlap) win; raw tables gather here
+                feats_b = gather_input(self.feats, mb)
                 t0 = time.perf_counter()
                 # the fused compiled step is one dispatch; forward/backward/
                 # optimizer attribution needs obs.profile.profile_train_step
@@ -253,6 +289,10 @@ class SampledTrainer:
         for name, cs in loader.cache_stats().items():
             stats[f"{name}_hits"] = cs["hits"]
             stats[f"{name}_misses"] = cs["misses"]
+            stats[f"{name}_hit_rate"] = cs["hit_rate"]
+        if is_feature_store(self.feats):
+            for k, v in self.feats.stats().items():
+                stats[f"feature_{k}"] = v
         return state, stats
 
     # ------------------------------------------------------------------
@@ -274,6 +314,9 @@ class SampledTrainer:
                          epoch: int = 0) -> Dict[str, float]:
         """Sampled-forward accuracy/loss over ``ids`` using the engine's
         fanout config (batched, in id order, fresh neighborhoods)."""
+        import dataclasses
+
+        from repro.feats import is_feature_store
         ids = np.asarray(ids, dtype=np.int32)
         cfg = self.engine.cfg
         tot_loss, tot_acc, nb = 0.0, 0.0, 0
@@ -283,6 +326,13 @@ class SampledTrainer:
                                              epoch=epoch)
             mb = build_minibatch(seq, step=lo, tile=cfg.tile,
                                  node_block=cfg.node_block, bucket=cfg.bucket)
+            if is_feature_store(self.feats):
+                # read-only host gather: periodic eval may run while the
+                # loader's producer thread owns the store's cache state
+                # (stores are single-writer), so don't mutate it here
+                mb = dataclasses.replace(mb, feats={
+                    "feature": jnp.asarray(
+                        self.feats.host_rows(np.asarray(mb.input_ids)))})
             logits = self.engine.forward_minibatch(params, mb, self.feats)
             loss, acc = executor.softmax_xent(
                 logits, jnp.asarray(self.labels[chunk]))

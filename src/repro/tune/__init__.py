@@ -21,7 +21,7 @@ from repro.tune.space import (GemmVariant, TravVariant,     # noqa: F401
 __all__ = [
     "TuneCache", "default_cache_path", "TuningDecisions", "device_kind",
     "fused_gather_budget_bytes", "vmem_bytes", "GemmVariant", "TravVariant",
-    "gemm_key", "trav_key", "Tuner", "TuneReport",
+    "gemm_key", "trav_key", "Tuner", "TuneReport", "measured_split",
 ]
 
 
@@ -30,4 +30,8 @@ def __getattr__(name):
     if name in ("Tuner", "TuneReport"):
         from repro.tune import tuner as _tuner
         return getattr(_tuner, name)
+    if name == "measured_split":
+        # lazy: pulls in repro.feats (jax) — keep this __init__ import-light
+        from repro.tune.feature_budget import measured_split
+        return measured_split
     raise AttributeError(name)

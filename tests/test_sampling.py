@@ -548,3 +548,90 @@ def test_device_graph_csc_consistent(graph):
         mask = (graph.dst_sorted == v) & (et_dst_sorted == t)
         np.testing.assert_array_equal(csc_src[lo:hi],
                                       graph.src[graph.perm_dst][mask])
+
+
+# ---------------------------------------------------------------------------
+# zipf-skewed seed stream + loader cache-rate reporting (ISSUE 9 satellites)
+# ---------------------------------------------------------------------------
+def test_seed_stream_zipf_deterministic_and_pinned():
+    a = SeedStream(200, 64, seed=9, zipf_alpha=1.2)
+    b = SeedStream(200, 64, seed=9, zipf_alpha=1.2)
+    np.testing.assert_array_equal(a.batch(3), b.batch(3))
+    # pure function of (seed, step): replaying a step yields the same batch
+    np.testing.assert_array_equal(a.batch(3), a.batch(3))
+    assert a.batch(0).dtype == np.int32
+    # the distribution is *pinned*: inverse-CDF draws over rank
+    # probabilities (r+1)^-alpha mapped through the seed-keyed rank
+    # permutation, reproduced here from the documented spec
+    rng = np.random.default_rng((9, 3))
+    p = np.arange(1, 201, dtype=np.float64) ** -1.2
+    cdf = np.cumsum(p / p.sum())
+    ranks = np.searchsorted(cdf, rng.random(64), side="right")
+    r2i = np.random.default_rng((9, 0x5eed)).permutation(200).astype(np.int64)
+    np.testing.assert_array_equal(
+        a.batch(3), r2i[np.minimum(ranks, 199)].astype(np.int32))
+
+
+def test_seed_stream_zipf_skews_traffic():
+    n = 500
+    s = SeedStream(n, 256, seed=1, zipf_alpha=1.2)
+    draws = np.concatenate([s.batch(t) for t in range(40)])
+    counts = np.bincount(draws, minlength=n)
+    top = np.sort(counts)[::-1]
+    # power law: the top 10% of nodes absorb the majority of traffic,
+    # which a uniform stream cannot produce at this sample size
+    assert top[: n // 10].sum() / counts.sum() > 0.5
+    # the hottest node is the permuted rank-0 id, not simply id 0
+    assert np.argmax(counts) == s._rank2idx[0]
+
+
+def test_seed_stream_uniform_path_bitwise_unchanged():
+    # adding the skew knob must not perturb existing uniform streams: the
+    # draw is pinned to the exact pre-knob Generator call (incl. dtype)
+    s = SeedStream(120, 16, seed=4)
+    expected = np.random.default_rng((4, 7)).integers(
+        0, 120, size=16, dtype=np.int32)
+    np.testing.assert_array_equal(s.batch(7), expected)
+
+
+def test_seed_stream_ids_population():
+    ids = np.array([5, 17, 40, 99], dtype=np.int32)
+    s = SeedStream(ids=ids, batch_size=32, seed=0, zipf_alpha=1.5)
+    assert s.num_nodes == 4
+    assert set(s.batch(0).tolist()) <= set(ids.tolist())
+    u = SeedStream(ids=ids, batch_size=32, seed=0)
+    assert set(u.batch(0).tolist()) <= set(ids.tolist())
+    with pytest.raises(ValueError):
+        SeedStream(ids=np.empty(0, np.int32))
+    with pytest.raises(ValueError):
+        SeedStream(100, zipf_alpha=0.0)
+
+
+def test_loader_stats_report_cache_hit_rates(graph):
+    """build_stats()/cache_stats() carry per-cache hit *rates* and the
+    LRU mirrors them into the metrics registry."""
+    from repro import obs
+    distinct, total = 2, 8
+    with obs.scope(metrics=True) as sc:
+        loader = MiniBatchLoader(
+            FanoutSampler(graph, [3, 3], seed=2),
+            SeedStream(graph.num_nodes, 6, seed=5, num_distinct=distinct),
+            tile=8, node_block=8, bucket=True, num_batches=total,
+            cache_blocks=8, cache_layouts=32,
+        )
+        try:
+            for _ in loader:
+                pass
+        finally:
+            loader.close()
+        bs = loader.build_stats()
+        want = (total - distinct) / total
+        assert bs["block_cache_hit_rate"] == pytest.approx(want)
+        assert 0.0 <= bs["layout_cache_hit_rate"] <= 1.0
+        cs = loader.cache_stats()
+        assert cs["block_cache"]["hit_rate"] == pytest.approx(want)
+        snap = sc.registry.snapshot()
+        rates = [m for m in snap["gauges"]
+                 if m["name"] == "loader_cache_hit_rate"
+                 and m["labels"].get("cache") == "block_cache"]
+        assert rates and rates[0]["value"] == pytest.approx(want)
