@@ -41,11 +41,21 @@ TRAIN_CONFIG = dict(
     hidden=8, classes=4, fanouts=[3, 3], batch_size=16, epochs=1, tile=8,
     node_block=8, eval_every_epochs=0, seed=0,
 )
+ONLINE_CONFIG = dict(
+    model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
+    classes=4, fanouts=[3, 3], tile=8, node_block=8, seed=0,
+    max_batch=8, rate_rps=300.0, num_requests=12, size_choices=(1, 2, 4),
+    slo_ms=5000.0,
+)
 SERVE_PHASES = ("sample", "layout", "execute")
 TRAIN_PHASES = ("sample", "layout", "train_step")
 # with --sampler device the host sample/layout phases are replaced by the
 # jit pipeline's spans — require those instead
 DEVICE_SERVE_PHASES = ("sample_device", "layout_device", "execute")
+# the async online runtime adds its own worker-thread spans on top of the
+# loader/executor phases: one "coalesce" per admission decision, one
+# "execute_async" per executed batch
+ONLINE_PHASES = ("coalesce", "execute_async", "sample", "layout", "execute")
 
 
 def _quiet(*_a, **_k):
@@ -76,16 +86,18 @@ def _validate(kind: str, trace_path: str, metrics_path: str,
 def run(out=print, workdir=None):
     """Serve + train with tracing, validate the artifacts; returns
     ``(problems, serve_stats, train_stats)``."""
-    from repro.launch.serve_rgnn import serve
+    from repro.launch.serve_rgnn import serve, serve_online
     from repro.launch.train_rgnn import train
     from repro.obs.registry import (snapshot_counter_total,
-                                    snapshot_histogram)
+                                    snapshot_histogram,
+                                    snapshot_histograms)
 
     workdir = workdir or tempfile.mkdtemp(prefix="repro-obs-smoke-")
     p = {k: os.path.join(workdir, f"{k}.json")
          for k in ("serve_trace", "serve_metrics",
                    "train_trace", "train_metrics",
-                   "dserve_trace", "dserve_metrics")}
+                   "dserve_trace", "dserve_metrics",
+                   "online_trace", "online_metrics")}
 
     s_stats = serve(trace_out=p["serve_trace"],
                     metrics_out=p["serve_metrics"], log=_quiet,
@@ -96,6 +108,9 @@ def run(out=print, workdir=None):
     d_stats = serve(trace_out=p["dserve_trace"],
                     metrics_out=p["dserve_metrics"], log=_quiet,
                     sampler="device", **SERVE_CONFIG)
+    o_stats = serve_online(trace_out=p["online_trace"],
+                           metrics_out=p["online_metrics"], log=_quiet,
+                           **ONLINE_CONFIG)
 
     problems = _validate("serve", p["serve_trace"], p["serve_metrics"],
                          SERVE_PHASES)
@@ -107,6 +122,32 @@ def run(out=print, workdir=None):
         problems.append(
             f"serve[device]: {d_stats['host_builds']} batches fell back to "
             f"the host sampling pipeline")
+    problems += _validate("serve[online]", p["online_trace"],
+                          p["online_metrics"], ONLINE_PHASES)
+    # tenant-labeled request telemetry: the per-request latency histogram
+    # is keyed model=<tenant>, and the multi-tenant snapshot reader must
+    # enumerate it (count = every completed request)
+    tenants = snapshot_histograms(o_stats["metrics"], "serve_request_ms")
+    done = sum(n for s, n in o_stats["by_status"].items()
+               if s in ("ok", "late"))
+    if not tenants:
+        problems.append(
+            "serve[online] metrics: no serve_request_ms histogram (tenant-"
+            "labeled request latency missing)")
+    elif {t["labels"].get("model") for t in tenants} != {
+            ONLINE_CONFIG["model"]}:
+        problems.append(
+            f"serve[online] metrics: serve_request_ms labels "
+            f"{[t['labels'] for t in tenants]} missing the tenant label")
+    elif sum(t["summary"]["count"] for t in tenants) != done:
+        problems.append(
+            f"serve[online] metrics: serve_request_ms recorded "
+            f"{sum(t['summary']['count'] for t in tenants)} of {done} "
+            f"completed requests")
+    for counter in ("serve_requests", "serve_batches"):
+        if snapshot_counter_total(o_stats["metrics"], counter) <= 0:
+            problems.append(
+                f"serve[online] metrics: {counter} counter empty")
 
     # the counters/histograms the CI gates and drivers report from must
     # actually be populated, not merely schema-valid
@@ -134,6 +175,11 @@ def run(out=print, workdir=None):
                 f"phases={len(DEVICE_SERVE_PHASES)};"
                 f"host_builds={d_stats['host_builds']};"
                 f"problems={len(problems)}"))
+    out(csv_row("obs_smoke/serve_online", o_stats["latency_ms_p50"] / 1e3,
+                f"p99_ms={o_stats['latency_ms_p99']:.1f};"
+                f"phases={len(ONLINE_PHASES)};"
+                f"slo_attainment={o_stats['slo_attainment']:.2f};"
+                f"problems={len(problems)}"))
     return problems, s_stats, t_stats
 
 
@@ -147,7 +193,8 @@ def ci_check(workdir=None) -> None:
         raise SystemExit(1)
     print(f"[obs_smoke --ci] OK: serve phases {list(SERVE_PHASES)} + train "
           f"phases {list(TRAIN_PHASES)} + device-sampler phases "
-          f"{list(DEVICE_SERVE_PHASES)} all present and nonzero; trace and "
+          f"{list(DEVICE_SERVE_PHASES)} + online-runtime phases "
+          f"{list(ONLINE_PHASES)} all present and nonzero; trace and "
           f"metrics JSON schema-valid; p50 {s_stats['latency_ms_p50']:.1f} "
           f"ms / p99 {s_stats['latency_ms_p99']:.1f} ms over "
           f"{s_stats['batches']} served batches")

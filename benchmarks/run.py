@@ -17,6 +17,7 @@ obs_smoke — telemetry artifacts (trace + metrics JSON) schema validation
 sample_native — device-native sampling steady-state gate (zero host builds)
 dist_smoke — multi-shard serve/train retrace gate + dp=4 bitwise parity
 feature_cache — tiered feature storage: per-tier gather latency + hot-row cache hit rate
+serve_open_loop — online serving: open-loop traffic through the async runtime (SLO / tail latency)
 
 ``--json PATH`` (e.g. ``--json BENCH_table5.json``) additionally writes the
 rows machine-readably — ``{"name", "us_per_call", "derived": {k: v}}`` —
@@ -54,7 +55,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig8,table5,fig9,fig10,fig11,loc,"
                          "serve,serve_cached,train_sampled,tune_smoke,"
-                         "obs_smoke,sample_native,dist_smoke,feature_cache")
+                         "obs_smoke,sample_native,dist_smoke,feature_cache,"
+                         "serve_open_loop")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (e.g. BENCH_all.json)")
     args = ap.parse_args()
@@ -63,8 +65,8 @@ def main() -> None:
     from benchmarks import (dist_smoke, feature_cache, fig8_speedup,
                             fig9_breakdown, fig10_memory, fig11_dims,
                             loc_report, obs_smoke, sample_native,
-                            serve_cached, serve_sampled, table5_opts,
-                            train_sampled, tune_smoke)
+                            serve_cached, serve_open_loop, serve_sampled,
+                            table5_opts, train_sampled, tune_smoke)
     from repro import obs
 
     rows = []
@@ -91,6 +93,7 @@ def main() -> None:
         ("sample_native", sample_native.run),
         ("dist_smoke", dist_smoke.run),
         ("feature_cache", feature_cache.run),
+        ("serve_open_loop", serve_open_loop.run),
     ]
     # one enclosing scope: every driver/benchmark scope folds its counters
     # and histograms into this registry on exit, so the JSON snapshot is

@@ -1,0 +1,135 @@
+"""Open-loop online serving benchmark: the async request pipeline under
+seeded Poisson traffic.
+
+Replays a deterministic open-loop request schedule (arrivals independent
+of completions — the regime where tail latency is meaningful) through the
+``ServingRuntime``: deadline-aware coalescing over the measured batch-size
+ladder, sampling / feature-gather / compiled execute overlapped across
+worker threads. Reports per-request p50/p99 latency, SLO attainment,
+queue depth, batch fill, and the zero-retrace counters.
+
+``--ci`` asserts the serving contracts on a small configuration:
+
+* zero executor retraces after calibration (the shape floors + ladder
+  warmup pinned the compiled set before traffic started);
+* SLO attainment >= 0.95 and request p99 within the per-request budget;
+* the *fine* ladder (2^k and 3*2^k rungs) costs no more than pow2-only
+  coalescing would, priced against the load's request-size distribution
+  with the one calibration-measured latency table (finer rungs must pay
+  for their extra compiled shapes in reduced pad waste, or validation
+  should have dropped them).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks.common import csv_row
+from repro.launch.serve_rgnn import serve_online
+from repro.serve import OpenLoopLoad
+
+# one small bucketed config: 2-hop rgat over the reduced AIFB graph
+CONFIG = dict(
+    model="rgat", dataset="aifb", scale=0.05, layers=2, dim=8, hidden=8,
+    classes=4, fanouts=[3, 3], tile=8, node_block=8, seed=0,
+    max_batch=8, max_wait_ms=3.0,
+)
+LOAD = dict(rate_rps=200.0, num_requests=32, process="poisson",
+            size_choices=(1, 2, 4), slo_ms=2000.0)
+
+
+def _covering(size: int, rungs) -> int:
+    return min(r for r in rungs if r >= size)
+
+
+def ladder_cost_ms(sizes, rungs, measured_ms) -> float:
+    """Expected per-schedule execute cost (ms) serving each request at its
+    covering rung — the pad-waste price of a rung set, under the one
+    measured latency table."""
+    return sum(measured_ms[_covering(s, rungs)] for s in sizes)
+
+
+def run(out=print, backend: str = "xla"):
+    stats = serve_online(backend=backend, ladder_kind="fine",
+                         log=lambda *a, **k: None, **CONFIG, **LOAD)
+    out(csv_row(
+        "serve_open_loop/request_p50", stats["latency_ms_p50"] / 1e3,
+        f"rate_rps={LOAD['rate_rps']:g};requests={stats['requests']}"))
+    out(csv_row(
+        "serve_open_loop/request_p99", stats["latency_ms_p99"] / 1e3,
+        f"slo_attainment={stats['slo_attainment']:.3f};"
+        f"deadline_misses={stats['deadline_misses']};"
+        f"queue_depth_max={stats['queue_depth_max']}"))
+    out(csv_row(
+        "serve_open_loop/batch_execute", stats["execute_ms_mean"] / 1e3,
+        f"batches={stats['batches']};"
+        f"batch_fill={stats['batch_fill']:.2f};"
+        f"ladder={'/'.join(map(str, stats['ladder']))};"
+        f"retraces_after_warmup={stats['retraces_after_warmup']}"))
+    return stats
+
+
+def ci_check(backend: str = "xla") -> None:
+    """Online-serving regression gate (exit 1 on failure)."""
+    stats = run(out=lambda *_: None, backend=backend)
+    failures = []
+
+    if stats["retraces_after_warmup"] != 0:
+        failures.append(
+            f"executor retraced {stats['retraces_after_warmup']}x during "
+            f"traffic (expected 0: calibration must pin the shape set)")
+    if stats["slo_attainment"] < 0.95:
+        failures.append(
+            f"SLO attainment {stats['slo_attainment']:.3f} < 0.95")
+    if stats["latency_ms_p99"] > LOAD["slo_ms"]:
+        failures.append(
+            f"request p99 {stats['latency_ms_p99']:.1f} ms exceeds the "
+            f"{LOAD['slo_ms']:g} ms budget")
+    if stats["requests"] != LOAD["num_requests"]:
+        failures.append(
+            f"{stats['requests']} terminal responses for "
+            f"{LOAD['num_requests']} submitted requests (drain leaked)")
+
+    # fine-vs-pow2 ladder economics, priced with the single calibration
+    # table over the load's actual request-size mix
+    measured = stats["ladder_ms"]
+    sizes = [r.num_seeds for r in OpenLoopLoad(
+        1000, seed=CONFIG["seed"], **LOAD).requests()]
+    pow2 = [r for r in measured if r & (r - 1) == 0]
+    fine_cost = ladder_cost_ms(sizes, stats["ladder"], measured)
+    pow2_cost = ladder_cost_ms(sizes, pow2, measured)
+    if fine_cost > pow2_cost * 1.001:
+        failures.append(
+            f"validated fine ladder {stats['ladder']} costs "
+            f"{fine_cost:.2f} ms over the schedule vs {pow2_cost:.2f} ms "
+            f"pow2-only (validation kept a rung that does not pay)")
+
+    if failures:
+        for f in failures:
+            print(f"[serve_open_loop --ci] FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"[serve_open_loop --ci] OK: {stats['requests']} requests, "
+          f"p50 {stats['latency_ms_p50']:.1f} / "
+          f"p99 {stats['latency_ms_p99']:.1f} ms, "
+          f"SLO attainment {stats['slo_attainment']:.2f}, "
+          f"0 retraces after warmup; fine ladder {stats['ladder']} "
+          f"{fine_cost:.2f} ms <= pow2 {pow2_cost:.2f} ms over the "
+          f"schedule")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true",
+                    help="assertion mode: SLO/retrace/ladder gates")
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "pallas_interpret"])
+    args = ap.parse_args(argv)
+    if args.ci:
+        ci_check(backend=args.backend)
+    else:
+        print("name,us_per_call,derived")
+        run(backend=args.backend)
+
+
+if __name__ == "__main__":
+    main()

@@ -68,11 +68,18 @@ jtu.register_pytree_node(
 
 def build_kernel_layouts(
     hg: HeteroGraph, tile: int = 128, node_block: int = 128,
-    bucket: bool = False,
+    bucket: bool = False, row_floors=None,
 ) -> KernelLayouts:
     """Build the per-graph layouts; with ``bucket=True`` every layout is
     grown to power-of-two row/edge-slot counts (pure padding), so repeated
-    compilation caches hit across sampled blocks of different sizes."""
+    compilation caches hit across sampled blocks of different sizes.
+
+    The segment-row buckets depend on how edges distribute across
+    segments, not just the graph's padded totals, so blocks sharing one
+    (node, edge, unique) bucket combination can still disagree here.
+    ``row_floors`` (a ``bucketing.LayoutRowFloors``) clamps each field's
+    bucket to a grow-only floor shared across blocks, pinning the layout
+    shapes the way ``pad_block_graph`` targets pin the graph shapes."""
     edge_ps = L.pad_segments(hg.etype_ptr, tile)
     unique_ps = L.pad_segments(hg.unique_etype_ptr, tile)
     node_ps = L.pad_segments(hg.ntype_ptr, tile)
@@ -81,13 +88,18 @@ def build_kernel_layouts(
         if tile & (tile - 1):
             raise ValueError("bucketed layouts need a power-of-two tile")
 
-        def bucket_rows(rows: int) -> int:
-            return max(tile, L.pow2ceil(rows))
-        edge_ps = L.pad_segments_rows(edge_ps, bucket_rows(edge_ps.padded_rows))
+        def bucket_rows(name: str, rows: int) -> int:
+            t = max(tile, L.pow2ceil(rows))
+            if row_floors is not None:
+                t = row_floors.raise_to(name, t)
+            return t
+        edge_ps = L.pad_segments_rows(
+            edge_ps, bucket_rows("edge", edge_ps.padded_rows))
         unique_ps = L.pad_segments_rows(
-            unique_ps, bucket_rows(unique_ps.padded_rows))
-        node_ps = L.pad_segments_rows(node_ps, bucket_rows(node_ps.padded_rows))
-        bc = L.pad_blocked_csr(bc, bucket_rows(bc.padded_edges))
+            unique_ps, bucket_rows("unique", unique_ps.padded_rows))
+        node_ps = L.pad_segments_rows(
+            node_ps, bucket_rows("node", node_ps.padded_rows))
+        bc = L.pad_blocked_csr(bc, bucket_rows("csr", bc.padded_edges))
     return KernelLayouts(
         edge_seg=K.padded_segments_dev(edge_ps),
         unique_seg=K.padded_segments_dev(unique_ps),

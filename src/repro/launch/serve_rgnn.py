@@ -430,8 +430,123 @@ def _serve_dist(engine, graph, store, params, batch_size, num_batches,
     return stats
 
 
+def serve_online(
+    model: str = "rgat",
+    dataset: str = "aifb",
+    scale: float = 1.0,
+    layers: int = 2,
+    dim: int = 64,
+    hidden: int = 64,
+    classes: int = 16,
+    fanouts=None,
+    backend: str = "xla",
+    tile: int = 32,
+    node_block: int = 32,
+    seed: int = 0,
+    sampler: str = "host",
+    feature_store: str = "device",
+    feature_budget=None,
+    skew=None,
+    prefetch_depth: int = 2,
+    cache_layouts: int = 64,
+    rate_rps: float = 100.0,
+    num_requests: int = 64,
+    process: str = "poisson",
+    burst_size: int = 4,
+    slo_ms=1000.0,
+    size_choices=(1, 2, 4, 8),
+    max_batch: int = 32,
+    max_wait_ms: float = 5.0,
+    ladder_kind: str = "fine",
+    speedup: float = 1.0,
+    obs_mode: str = "on",
+    trace_out=None,
+    metrics_out=None,
+    log=print,
+):
+    """Online serving: open-loop request traffic through the async
+    ``ServingRuntime`` (deadline-aware coalescing, prefetch-overlapped
+    execution) instead of the offline batch loop. Returns the runtime's
+    stats dict — per-request latency percentiles, SLO attainment, queue
+    depth, rung occupancy, and the zero-retrace counters."""
+    from repro.serve import OpenLoopLoad, ServingRuntime, ladder
+
+    with contextlib.ExitStack() as stack:
+        sc = None
+        if obs_mode == "off":
+            stack.enter_context(obs.disabled())
+        else:
+            sc = stack.enter_context(obs.scope(
+                metrics=True, tracing=trace_out is not None))
+
+        t0 = time.perf_counter()
+        graph = table3_graph(dataset, scale=scale, seed=seed)
+        rng = np.random.default_rng(seed)
+        feats = rng.normal(size=(graph.num_nodes, dim)).astype(np.float32)
+        engine = hector.compile(
+            model, graph, layers=layers, dim=dim, hidden=hidden,
+            classes=classes, sample=fanouts, backend=backend, tile=tile,
+            node_block=node_block, bucket=True, seed=seed, sampler=sampler,
+            feature_store=feature_store, feature_budget=feature_budget,
+            tune_full_graph=False, log=log)
+        params = engine.init(jax.random.key(seed))
+        store = engine.make_feature_store(feats)
+        rungs = ladder(max_batch, ladder_kind)
+        log(f"[serve_rgnn] online: {model} on {dataset} (scale {scale}), "
+            f"ladder {rungs}, {rate_rps:g} req/s x {num_requests} "
+            f"({process}), SLO {slo_ms} ms "
+            f"(setup {time.perf_counter() - t0:.2f}s)")
+
+        rt = ServingRuntime(
+            engine, params, store, name=model, rungs=rungs,
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
+            depth=prefetch_depth, cache_layouts=cache_layouts)
+        try:
+            rt.calibrate(log=log)
+            load = OpenLoopLoad(
+                graph.num_nodes, rate_rps=rate_rps,
+                num_requests=num_requests, process=process,
+                burst_size=burst_size, size_choices=size_choices,
+                slo_ms=slo_ms, zipf_alpha=skew, seed=seed)
+            t_load0 = time.perf_counter()
+            submitted = load.replay(rt.submit, speedup=speedup)
+            rt.drain()
+            t_load = time.perf_counter() - t_load0
+        finally:
+            rt.close()
+
+        stats = rt.stats()
+        stats["submitted"] = submitted
+        stats["requests_per_s"] = submitted / max(t_load, 1e-9)
+        log(f"[serve_rgnn] online: {submitted} requests in {t_load:.2f}s "
+            f"({stats['requests_per_s']:.1f} req/s): "
+            f"latency p50 {stats['latency_ms_p50']:.1f} ms / "
+            f"p99 {stats['latency_ms_p99']:.1f} ms, "
+            f"SLO attainment {stats['slo_attainment']:.1%}, "
+            f"queue depth max {stats['queue_depth_max']}, "
+            f"{stats['batches']} batches "
+            f"(fill {stats['batch_fill']:.0%}, rungs {stats['rung_counts']})")
+        log(f"[serve_rgnn] online executor: {stats['executor_traces']} "
+            f"traces, {stats['retraces_after_warmup']} retraces after "
+            f"warmup, {stats['shape_floor_growths']} shape-floor growths")
+        if sc is not None:
+            if sc.tracer is not None and trace_out:
+                sc.tracer.write(trace_out)
+                log(f"[serve_rgnn] chrome trace -> {trace_out}")
+            stats["metrics"] = sc.registry.snapshot()
+            if metrics_out:
+                sc.registry.export(metrics_out)
+                log(f"[serve_rgnn] metrics snapshot -> {metrics_out}")
+        return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--runtime", default="loop", choices=["loop", "online"],
+                    help="'loop': offline batch loop over a seed stream; "
+                         "'online': open-loop request traffic through the "
+                         "async serving runtime (deadline-aware coalescing, "
+                         "per-request SLOs)")
     ap.add_argument("--model", default="rgat", choices=sorted(MODEL_PROGRAMS))
     ap.add_argument("--dataset", default="aifb",
                     choices=sorted(REDUCED_SCALES))
@@ -520,6 +635,33 @@ def main(argv=None):
                     help="after serving, time every op instance of the "
                          "compiled plan individually (per-op kernel "
                          "breakdown on the last batch)")
+    online = ap.add_argument_group("online runtime (--runtime online)")
+    online.add_argument("--rate", type=float, default=100.0,
+                        help="average request arrival rate (req/s)")
+    online.add_argument("--requests", type=int, default=64,
+                        help="number of requests to replay")
+    online.add_argument("--arrivals", default="poisson",
+                        choices=["poisson", "burst", "uniform"],
+                        help="arrival process (open loop: arrivals never "
+                             "wait on completions)")
+    online.add_argument("--burst-size", type=int, default=4,
+                        help="requests per burst for --arrivals burst")
+    online.add_argument("--slo-ms", type=float, default=1000.0,
+                        help="per-request latency budget; admission "
+                             "rejects requests that cannot make it")
+    online.add_argument("--sizes", default="1,2,4,8",
+                        help="comma-separated request sizes (seeds per "
+                             "request)")
+    online.add_argument("--max-wait-ms", type=float, default=5.0,
+                        help="coalescer hold time before dispatching a "
+                             "partial batch")
+    online.add_argument("--ladder", default="fine",
+                        choices=["fine", "pow2"],
+                        help="batch-size rung ladder: 'fine' = {2^k, "
+                             "3*2^k} validated against measured latency, "
+                             "'pow2' = powers of two only")
+    online.add_argument("--speedup", type=float, default=1.0,
+                        help="compress the arrival schedule by this factor")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -529,6 +671,25 @@ def main(argv=None):
         scale = REDUCED_SCALES[args.dataset]
     else:
         scale = 1.0
+    if args.runtime == "online":
+        return serve_online(
+            model=args.model, dataset=args.dataset, scale=scale,
+            layers=args.layers, dim=args.dim, hidden=args.hidden,
+            classes=args.classes,
+            fanouts=parse_fanout(args.fanout, args.layers),
+            backend=args.backend, tile=args.tile,
+            node_block=args.node_block, seed=args.seed,
+            sampler=args.sampler, feature_store=args.feature_store,
+            feature_budget=args.feature_budget, skew=args.skew,
+            cache_layouts=args.cache_layouts or 64,
+            rate_rps=args.rate, num_requests=args.requests,
+            process=args.arrivals, burst_size=args.burst_size,
+            slo_ms=args.slo_ms,
+            size_choices=tuple(int(s) for s in args.sizes.split(",")),
+            max_batch=args.batch_size, max_wait_ms=args.max_wait_ms,
+            ladder_kind=args.ladder, speedup=args.speedup,
+            obs_mode=args.obs, metrics_out=args.metrics_out,
+        )
     return serve(
         model=args.model, dataset=args.dataset, scale=scale,
         layers=args.layers, dim=args.dim, hidden=args.hidden,

@@ -301,6 +301,16 @@ def snapshot_histogram(snap: dict, name: str, **labels) -> Optional[dict]:
     return None
 
 
+def snapshot_histograms(snap: dict, name: str) -> List[dict]:
+    """Every label set of one histogram name in a snapshot:
+    ``[{"labels": {...}, "summary": {...}}, ...]``. The multi-tenant
+    reader — per-tenant serving latency lands under the same name with a
+    ``model=<tenant>`` label, and dashboards/CI enumerate the tenants
+    from the snapshot instead of knowing them up front."""
+    return [{"labels": it["labels"], "summary": it["summary"]}
+            for it in snap.get("histograms", ()) if it["name"] == name]
+
+
 # ---------------------------------------------------------------------------
 # disabled mode: shared no-op singletons
 # ---------------------------------------------------------------------------

@@ -73,6 +73,101 @@ def pad_block_graph(bg: HeteroGraph, n_target: int = 0, e_target: int = 0,
     return hg
 
 
+class LayoutRowFloors(dict):
+    """Grow-only floors for layout-internal row buckets.
+
+    ``build_kernel_layouts`` pads segment layouts to
+    ``pow2ceil(sum_seg ceil(count / tile) * tile)`` — a quantity that moves
+    with the *distribution* of edges across segments, not just the padded
+    totals, so two blocks with identical (n, e, u) buckets can still land
+    in different layout row buckets and retrace. This maps a layout field
+    name to the largest row bucket seen; ``raise_to`` is the grow-only
+    clamp the layout builder calls per field."""
+
+    def __init__(self, owner=None):
+        super().__init__()
+        self._owner = owner
+
+    def raise_to(self, name: str, rows: int) -> int:
+        cur = self.get(name, 0)
+        if rows <= cur:
+            return cur
+        if name in self and self._owner is not None:
+            self._owner.growths += 1
+        self[name] = rows
+        return rows
+
+
+class ShapeFloors:
+    """Grow-only bucket floors, keyed by (batch key, hop).
+
+    Open-loop serving pads every admitted batch to a ladder rung, but the
+    *sampled* block shapes at one rung still jitter across pow2 buckets
+    (per-hop node/edge counts land on either side of a bucket boundary),
+    so every new bucket combination is a fresh XLA compile — a
+    multi-hundred-ms latency spike in the middle of traffic. A
+    ``ShapeFloors`` remembers, per key and hop, the largest bucket seen so
+    far and pads every later block *up* to it: shapes converge to one
+    compiled set per key, and since a floor only ever grows (by whole
+    pow2 buckets, so log-many times at most), steady-state retraces reach
+    zero instead of recurring forever.
+
+    Single-writer: owned by one loader's producer thread (the serving
+    runtime passes a fresh instance per tenant). Callers using a
+    sampled-block cache should key it off the same floors epoch or leave
+    it disabled — a cached batch replays the shapes it was built under.
+    """
+
+    def __init__(self):
+        self._graph = {}    # (key, hop) -> [n, e, u] floors
+        self._layout = {}   # (key, hop) -> LayoutRowFloors
+        self._tail = {}     # key -> final dst_local bucket floor
+        self.growths = 0    # floor raises after the first sighting of a key
+
+    def pad_graph(self, key, hop: int, g: HeteroGraph) -> HeteroGraph:
+        f = self._graph.get((key, hop))
+        hg = pad_block_graph(g, *(f if f is not None else (0, 0, 0)))
+        grown = (hg.num_nodes, hg.num_edges, hg.num_unique)
+        if f is None:
+            self._graph[(key, hop)] = list(grown)
+        elif grown != tuple(f):
+            self._graph[(key, hop)] = list(grown)
+            self.growths += 1
+        return hg
+
+    def layout_floors(self, key, hop: int) -> LayoutRowFloors:
+        lf = self._layout.get((key, hop))
+        if lf is None:
+            lf = LayoutRowFloors(self)
+            self._layout[(key, hop)] = lf
+        return lf
+
+    def pad_tail(self, key, n: int) -> int:
+        t = max(self._tail.get(key, 0), pow2ceil(max(1, n)))
+        if key in self._tail and t > self._tail[key]:
+            self.growths += 1
+        self._tail[key] = t
+        return t
+
+    def bump(self, levels: int = 1) -> None:
+        """Raise every floor by ``levels`` pow2 buckets — headroom so the
+        probed maximum is not the compiled ceiling. A serving calibration
+        pass probes floors on sampled traffic, bumps once, and thereafter
+        a floor growth (i.e. a retrace) needs a batch beyond *double* the
+        largest probed bucket."""
+        if levels <= 0:
+            return
+        for f in self._graph.values():
+            f[0] <<= levels
+            f[1] <<= levels
+            f[2] <<= levels
+        for lf in self._layout.values():
+            for k in lf:
+                lf[k] <<= levels
+        for k in self._tail:
+            self._tail[k] <<= levels
+
+
 def pad_index(idx: np.ndarray, target: int, fill: int = 0) -> np.ndarray:
     """Pad a gather-index vector to ``target`` entries with a benign index.
 

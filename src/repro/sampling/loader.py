@@ -287,7 +287,7 @@ class MiniBatch:
 def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
                     node_block: int = 128, bucket: bool = False,
                     layout_cache: Optional[LRUCache] = None,
-                    layout_scope=None) -> MiniBatch:
+                    layout_scope=None, shape_floors=None) -> MiniBatch:
     """Host-side assembly of a ``MiniBatch`` from a sampled ``BlockSequence``.
 
     With ``bucket=True`` (the serving fast path) each block graph, its
@@ -302,43 +302,69 @@ def build_minibatch(seq: BlockSequence, step: int = 0, tile: int = 128,
     before. ``layout_scope`` (any hashable, e.g. a partition id) namespaces
     the cache entries so callers sharing one cache across graph shards
     never replay each other's layouts.
+
+    ``shape_floors`` (a ``bucketing.ShapeFloors``) additionally pads each
+    hop up to the largest bucket previously seen for this seed count — the
+    serving runtime's grow-only guarantee that one ladder rung converges
+    to one compiled shape set instead of retracing on every fresh bucket
+    combination.
     """
     graphs = [b.graph for b in seq.blocks]
     input_ids = seq.input_node_ids
     dst_locals = [b.dst_local for b in seq.blocks]
     if bucket:
-        graphs = [pad_block_graph(g) for g in graphs]
+        if shape_floors is not None:
+            key = int(seq.seed_perm.shape[0])
+            graphs = [shape_floors.pad_graph(key, i, g)
+                      for i, g in enumerate(graphs)]
+        else:
+            graphs = [pad_block_graph(g) for g in graphs]
         input_ids = pad_index(input_ids, graphs[0].num_nodes)
         # hop l's output rows become hop l+1's (padded) node-feature rows;
         # the last hop only needs to cover the seed gather, so any stable
         # bucket works.
         dst_locals = [
             pad_index(d, graphs[i + 1].num_nodes if i + 1 < len(graphs)
-                      else pow2ceil(d.shape[0]))
+                      else (shape_floors.pad_tail(key, d.shape[0])
+                            if shape_floors is not None
+                            else pow2ceil(d.shape[0])))
             for i, d in enumerate(dst_locals)
         ]
 
-    def layouts_for(g: HeteroGraph) -> codegen.KernelLayouts:
+    def layouts_for(hop: int, g: HeteroGraph) -> codegen.KernelLayouts:
+        # Layout-internal row buckets jitter with the edge distribution even
+        # at pinned graph buckets, so the floors must reach into the layout
+        # build too — and the cache key must carry the floor values, or a
+        # pre-growth entry would replay stale shapes after a floor raise.
+        rf = (shape_floors.layout_floors(int(seq.seed_perm.shape[0]), hop)
+              if bucket and shape_floors is not None else None)
         if layout_cache is None:
             return codegen.build_kernel_layouts(
-                g, tile=tile, node_block=node_block, bucket=bucket)
-        key = (layout_scope, block_signature(g, tile, node_block, bucket))
-        kl = layout_cache.get(key)
+                g, tile=tile, node_block=node_block, bucket=bucket,
+                row_floors=rf)
+        ck = (layout_scope, block_signature(g, tile, node_block, bucket),
+              None if rf is None else (hop, tuple(sorted(rf.items()))))
+        kl = layout_cache.get(ck)
         if kl is None:
             kl = codegen.build_kernel_layouts(
-                g, tile=tile, node_block=node_block, bucket=bucket)
-            layout_cache.put(key, kl)
+                g, tile=tile, node_block=node_block, bucket=bucket,
+                row_floors=rf)
+            layout_cache.put(ck, kl)
         return kl
 
     return MiniBatch(
         step=step,
         seq=seq,
         tensors=[g.to_tensors() for g in graphs],
-        layouts=[layouts_for(g) for g in graphs],
+        layouts=[layouts_for(i, g) for i, g in enumerate(graphs)],
         input_ids=jnp.asarray(input_ids),
         dst_locals=[jnp.asarray(d) for d in dst_locals],
         seed_perm=jnp.asarray(seq.seed_perm),
     )
+
+
+class _EndOfStream(Exception):
+    """Internal: a callable seed source returned None — stream over."""
 
 
 def _partition_token(partition):
@@ -363,7 +389,17 @@ class MiniBatchLoader:
 
     ``seed_source`` is a ``SeedStream`` or any ``step -> np.ndarray``
     callable. Iteration yields ``MiniBatch`` in step order; with
-    ``num_batches`` set the loader raises ``StopIteration`` afterwards.
+    ``num_batches`` set the loader raises ``StopIteration`` afterwards. A
+    *callable* source may also return ``None`` to end the stream early —
+    the hook the online serving runtime uses to drain an unbounded loader
+    on shutdown.
+
+    Failure contract: an exception anywhere in the producer pipeline
+    (seed source, sampler, layout build, feature gather) is re-raised in
+    the consumer on its next ``__next__`` — after already-built batches —
+    with the worker thread stopped and joined first; a worker that dies
+    without managing to report is detected and surfaced as a
+    ``RuntimeError`` instead of stalling the iterator forever.
 
     ``partition`` names the graph shard this loader samples from (a
     ``repro.dist.GraphPartition``, a ``(partition, shard)`` pair, or any
@@ -402,8 +438,12 @@ class MiniBatchLoader:
         cache_layouts: int = 0,
         partition=None,
         feature_store=None,
+        shape_floors=None,
     ):
         self.sampler = sampler
+        # serving's grow-only bucket floors (bucketing.ShapeFloors); host
+        # pipeline only — the device sampler has its own bucket hysteresis
+        self.shape_floors = shape_floors
         # a repro.feats store: the producer gathers each batch's input rows
         # and attaches them as mb.feats (single-writer contract — only this
         # loader's producer calls gather on it)
@@ -490,6 +530,8 @@ class MiniBatchLoader:
 
     def _build(self, step: int) -> MiniBatch:
         seeds = self._seeds_for(step)
+        if seeds is None:   # callable sources may end the stream this way
+            raise _EndOfStream
         epoch = self._epoch_of(step) if self._epoch_of is not None else None
         key = None
         if self.block_cache is not None:
@@ -506,13 +548,16 @@ class MiniBatchLoader:
                                  node_block=self.node_block,
                                  bucket=self.bucket,
                                  layout_cache=self.layout_cache,
-                                 layout_scope=self._partition_key)
+                                 layout_scope=self._partition_key,
+                                 shape_floors=self.shape_floors)
         if self.block_cache is not None:
             self.block_cache.put(key, mb)   # cached without feats
         return self._attach_feats(mb, step)
 
     def _build_device(self, step: int) -> MiniBatch:
         seeds = self._seeds_for(step)
+        if seeds is None:
+            raise _EndOfStream
         epoch = self._epoch_of(step) if self._epoch_of is not None else None
         key = None
         if self.block_cache is not None:
@@ -536,7 +581,11 @@ class MiniBatchLoader:
             if (self.num_batches is not None and
                     self._next_step - self._start_step >= self.num_batches):
                 return
-            self._pending.append(self._build_device(self._next_step))
+            try:
+                self._pending.append(self._build_device(self._next_step))
+            except _EndOfStream:
+                self.num_batches = self._next_step - self._start_step
+                return
             self._next_step += 1
 
     def _fill(self):
@@ -550,6 +599,8 @@ class MiniBatchLoader:
                 else:
                     try:
                         item = self._build(step)
+                    except _EndOfStream:
+                        item = self._SENTINEL
                     except BaseException as e:  # surface in the consumer
                         item = e
                     step += 1
@@ -575,13 +626,30 @@ class MiniBatchLoader:
             mb = self._pending.popleft()
             self._pump()   # dispatch the next batch before the caller executes
             return mb
-        item = self.q.get()
+        while True:
+            try:
+                item = self.q.get(timeout=0.5)
+                break
+            except queue.Empty:
+                # a worker that died without enqueuing anything (it should
+                # always enqueue its exception, but a daemon thread can be
+                # torn down mid-put) must surface as an error, not as an
+                # iterator that blocks forever
+                if self._thread is not None and not self._thread.is_alive():
+                    self._done = True
+                    raise RuntimeError(
+                        "MiniBatchLoader worker thread died without "
+                        "reporting a batch or an exception") from None
         if item is self._SENTINEL:
             self._done = True
             raise StopIteration
         if isinstance(item, BaseException):
-            # the producer thread died on this; don't hang the serving loop
+            # the producer failed on this batch: it enqueued the exception
+            # and exited its loop — stop the worker cleanly, then re-raise
+            # in the consumer instead of stalling the serving loop
             self._done = True
+            self._stop.set()
+            self._thread.join(timeout=2)
             raise item
         return item
 

@@ -1,0 +1,38 @@
+"""``repro.serve`` — the online serving runtime (ISSUE 10 tentpole).
+
+Hector's serving story so far was a *closed-loop* driver: one batch in
+flight, the next request waits for the previous answer. This package puts
+a production-shaped runtime in front of the compiled executors:
+
+* ``load``: open-loop request generation — seeded Poisson/burst arrival
+  processes over the existing ``SeedStream`` traffic models, per-request
+  deadlines. Open-loop (arrivals independent of completions) is the model
+  under which tail latency means anything.
+* ``coalesce``: deadline-aware batch coalescing — queued requests merge
+  into the largest shape-bucket rung whose *measured* execute latency
+  still meets the tightest in-batch SLO; expired requests are rejected,
+  never silently served late. The finer-than-pow2 rung ladder is
+  validated on the tuner's measurement harness
+  (``repro.tune.ladder.validate_ladder``).
+* ``runtime``: the async pipeline — sampling → feature gather → compiled
+  execute overlapped across in-flight batches via the prefetch loader,
+  bounded queues end to end, graceful drain on shutdown.
+* ``tenancy``: multi-model serving — several ``hector.compile()``
+  artifacts in one process sharing one tuning cache and one obs scope,
+  isolated by per-plan compile-cache keys.
+"""
+from repro.serve.coalesce import (Coalescer, LatencyModel,  # noqa: F401
+                                  PlannedBatch, PlanDecision, ladder)
+from repro.serve.load import (LATE, OK, OpenLoopLoad,       # noqa: F401
+                              REJECTED_DEADLINE, REJECTED_OVERLOAD,
+                              REJECTED_SHUTDOWN, Request, Response,
+                              TERMINAL_STATUSES)
+from repro.serve.runtime import ServingRuntime              # noqa: F401
+from repro.serve.tenancy import MultiTenantRuntime          # noqa: F401
+
+__all__ = [
+    "OpenLoopLoad", "Request", "Response", "OK", "LATE",
+    "REJECTED_DEADLINE", "REJECTED_OVERLOAD", "REJECTED_SHUTDOWN",
+    "TERMINAL_STATUSES", "ladder", "LatencyModel", "Coalescer",
+    "PlannedBatch", "PlanDecision", "ServingRuntime", "MultiTenantRuntime",
+]

@@ -358,6 +358,7 @@ class RGNNEngine:
         cache_blocks: int = 0,
         cache_layouts: int = 0,
         feature_store=None,
+        shape_floors=None,
     ) -> MiniBatchLoader:
         """A prefetching loader over this engine's sampler/layout config.
 
@@ -377,6 +378,7 @@ class RGNNEngine:
             bucket=self.cfg.bucket, depth=depth, start_step=start_step,
             num_batches=num_batches, cache_blocks=cache_blocks,
             cache_layouts=cache_layouts, feature_store=feature_store,
+            shape_floors=shape_floors,
         )
 
     # ------------------------------------------------------------------

@@ -22,6 +22,7 @@ __all__ = [
     "TuneCache", "default_cache_path", "TuningDecisions", "device_kind",
     "fused_gather_budget_bytes", "vmem_bytes", "GemmVariant", "TravVariant",
     "gemm_key", "trav_key", "Tuner", "TuneReport", "measured_split",
+    "measure_group", "validate_ladder", "LadderReport",
 ]
 
 
@@ -34,4 +35,11 @@ def __getattr__(name):
         # lazy: pulls in repro.feats (jax) — keep this __init__ import-light
         from repro.tune.feature_budget import measured_split
         return measured_split
+    if name == "measure_group":
+        from repro.tune.tuner import measure_group
+        return measure_group
+    if name in ("validate_ladder", "LadderReport"):
+        # lazy: ladder -> tuner -> codegen
+        from repro.tune import ladder as _ladder
+        return getattr(_ladder, name)
     raise AttributeError(name)

@@ -635,3 +635,77 @@ def test_loader_stats_report_cache_hit_rates(graph):
                  if m["name"] == "loader_cache_hit_rate"
                  and m["labels"].get("cache") == "block_cache"]
         assert rates and rates[0]["value"] == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# loader failure / end-of-stream contracts (the serving runtime's hooks)
+# ---------------------------------------------------------------------------
+def test_loader_worker_exception_propagates(graph):
+    """Regression: a crash anywhere in the producer pipeline must re-raise
+    in the consumer (it used to sit in the prefetch queue behind built
+    batches with the consumer eventually stalling), with the worker thread
+    stopped and joined first."""
+    sampler = FanoutSampler(graph, [2], seed=0)
+
+    def bad_source(step):
+        if step == 2:
+            raise ValueError("seed source exploded at step 2")
+        return np.arange(4, dtype=np.int32)
+
+    loader = MiniBatchLoader(sampler, bad_source, tile=8, node_block=8)
+    try:
+        assert next(loader).step == 0
+        assert next(loader).step == 1
+        with pytest.raises(ValueError, match="exploded at step 2"):
+            next(loader)
+        # terminal after the failure: no hang, no resurrected worker
+        with pytest.raises(StopIteration):
+            next(loader)
+    finally:
+        loader.close()
+    assert not loader._thread.is_alive()
+
+
+def test_loader_callable_source_none_ends_stream(graph):
+    """A callable seed source may return None to end an unbounded stream
+    (how the serving runtime drains its loader at shutdown)."""
+    sampler = FanoutSampler(graph, [2], seed=0)
+
+    def source(step):
+        return np.arange(4, dtype=np.int32) if step < 3 else None
+
+    loader = MiniBatchLoader(sampler, source, tile=8, node_block=8)
+    try:
+        assert [mb.step for mb in loader] == [0, 1, 2]
+        with pytest.raises(StopIteration):
+            next(loader)
+    finally:
+        loader.close()
+    assert not loader._thread.is_alive()
+
+
+def test_shape_floors_converge_to_one_shape_set(graph):
+    """Grow-only floors: batches at one seed count converge to a single
+    signature (floors absorb per-hop bucket jitter, including the
+    layout-internal segment-row buckets)."""
+    from repro.sampling.bucketing import ShapeFloors
+    from repro.sampling.loader import build_minibatch
+
+    sampler = FanoutSampler(graph, [3, 3], seed=7)
+    floors = ShapeFloors()
+    sigs = []
+    for i in range(12):
+        seeds = np.random.default_rng(i).integers(
+            0, graph.num_nodes, 8).astype(np.int32)
+        seq = sampler.sample(seeds, batch_index=i)
+        mb = build_minibatch(seq, step=i, tile=8, node_block=8, bucket=True,
+                             shape_floors=floors)
+        sigs.append(executor_signature(
+            (mb.tensors, mb.layouts, mb.input_ids, mb.dst_locals,
+             mb.seed_perm)))
+        if i == 5:
+            floors.bump(1)   # calibration-style headroom
+    # after the floors saturate (probe + bump), signatures are constant
+    tail = sigs[6:]
+    assert all(s == tail[0] for s in tail)
+    assert floors.growths >= 0
